@@ -1,0 +1,94 @@
+"""Shared benchmark utilities: timed op-mix runner for ΔTree + baselines.
+
+Maps the paper's experiment protocol (§5) to the batched-SPMD world:
+- concurrency = batch width of one SPMD step (the paper's thread count),
+- update rate u%: each batch mixes u% insert/delete (50/50) with (100-u)%
+  searches; searches run vectorized on the snapshot (wait-free), updates
+  apply in batch order,
+- performance = ops/second over `total_ops` with the jit warm.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TreeConfig, bulk_build, search_jit, update_batch
+from repro.core import baselines as BL
+
+
+def mixed_kinds(rng, k: int, update_pct: float) -> np.ndarray:
+    u = rng.random(k) < (update_pct / 100.0)
+    ins = rng.random(k) < 0.5
+    kinds = np.where(u, np.where(ins, 1, 2), 0).astype(np.int32)
+    return kinds
+
+
+def run_deltatree(height: int, initial: np.ndarray, key_max: int,
+                  update_pct: float, batch: int, total_ops: int,
+                  max_dnodes: int, seed: int = 0) -> dict:
+    cfg = TreeConfig(height=height, max_dnodes=max_dnodes, buf_cap=32,
+                     max_rounds=256)
+    tree = bulk_build(cfg, initial)
+    rng = np.random.default_rng(seed)
+    # warmup compile
+    kinds = mixed_kinds(rng, batch, update_pct)
+    keys = rng.integers(1, key_max, size=batch).astype(np.int32)
+    f, _ = search_jit(cfg, tree, jnp.asarray(keys)); f.block_until_ready()
+    if update_pct > 0:
+        tree, r, _ = update_batch(cfg, tree, jnp.asarray(kinds), jnp.asarray(keys))
+        r.block_until_ready()
+
+    steps = max(total_ops // batch, 1)
+    n_search = n_update = 0
+    any_update = update_pct > 0
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        kinds = mixed_kinds(rng, batch, update_pct)
+        keys = rng.integers(1, key_max, size=batch).astype(np.int32)
+        # fixed shapes: searches on the whole batch (wait-free snapshot);
+        # updates ride the whole batch too with OP_SEARCH rows as no-ops —
+        # avoids per-step recompiles from dynamic sub-batch sizes
+        f, _ = search_jit(cfg, tree, jnp.asarray(keys))
+        n_search += int((kinds == 0).sum())
+        if any_update:
+            tree, r, _ = update_batch(cfg, tree, jnp.asarray(kinds),
+                                      jnp.asarray(keys))
+            n_update += int((kinds != 0).sum())
+    if any_update:
+        tree.value.block_until_ready()
+    else:
+        f.block_until_ready()
+    dt = time.perf_counter() - t0
+    return {"ops_per_s": (n_search + n_update) / dt, "seconds": dt,
+            "n_search": n_search, "n_update": n_update}
+
+
+def run_baseline(BLcls, initial: np.ndarray, key_max: int, update_pct: float,
+                 batch: int, total_ops: int, seed: int = 0) -> dict:
+    st = BLcls.build(initial, cap=2 * len(initial) + total_ops + 16) \
+        if BLcls in (BL.SortedArray, BL.PointerBST) else BLcls.build(initial)
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(1, key_max, size=batch).astype(np.int32)
+    f = BLcls.search(st, jnp.asarray(keys)); f.block_until_ready()
+    has_update = hasattr(BLcls, "update")
+    steps = max(total_ops // batch, 1)
+    n_search = n_update = 0
+    up = update_pct if has_update else 0
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        kinds = mixed_kinds(rng, batch, up)
+        keys = rng.integers(1, key_max, size=batch).astype(np.int32)
+        f = BLcls.search(st, jnp.asarray(keys))
+        n_search += int((kinds == 0).sum())
+        if up > 0 and (kinds != 0).any():
+            umask = kinds != 0
+            st, r = BLcls.update(st, jnp.asarray(kinds[umask][:64]),
+                                 jnp.asarray(keys[umask][:64]))
+            n_update += int(min(umask.sum(), 64))
+    jnp.zeros(1).block_until_ready()
+    dt = time.perf_counter() - t0
+    return {"ops_per_s": (n_search + n_update) / dt, "seconds": dt,
+            "n_search": n_search, "n_update": n_update}

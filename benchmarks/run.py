@@ -1,0 +1,53 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV lines (assignment contract). Default is the quick profile (CPU-
+# friendly); pass --full for the paper-scale sweep.
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+
+def _in_x64_subprocess(module: str, quick: bool):
+    """serve bench needs JAX_ENABLE_X64; run isolated."""
+    env = dict(os.environ)
+    env["JAX_ENABLE_X64"] = "1"
+    env.setdefault("PYTHONPATH", "src")
+    code = (f"from {module} import main; main(quick={quick})")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr)
+        raise RuntimeError(f"{module} failed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="fig11|fig12|table1|ub_sweep|serve")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import fig11_small_tree, fig12_big_tree, table1_transfers
+    from benchmarks import ub_sweep
+
+    todo = args.only.split(",") if args.only else [
+        "table1", "ub_sweep", "fig11", "fig12", "serve"]
+    if "table1" in todo:
+        table1_transfers.main(quick=quick)
+    if "ub_sweep" in todo:
+        ub_sweep.main(quick=quick)
+    if "fig11" in todo:
+        fig11_small_tree.main(quick=quick)
+    if "fig12" in todo:
+        fig12_big_tree.main(quick=quick)
+    if "serve" in todo:
+        _in_x64_subprocess("benchmarks.serve_paged", quick)
+
+
+if __name__ == '__main__':
+    main()

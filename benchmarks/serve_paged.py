@@ -1,0 +1,64 @@
+"""Beyond-paper serving benchmark: ΔTree-paged decode vs dense-cache decode
+(per step wall time at smoke scale on CPU) + pager hot-path stats.
+
+Run under JAX_ENABLE_X64=1 (map-mode ΔTree); benchmarks.run spawns it so.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run(steps: int = 10):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models.registry import api
+    from repro.serving import PagerConfig, ServeEngine
+
+    cfg = get_smoke_config("granite_8b")
+    m = api(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    pc = PagerConfig(num_pages=256, page_size=8, max_seqs=32, max_blocks=128,
+                     tree_height=5)
+    eng = ServeEngine(cfg, params, pc, max_batch=8)
+    for n in (12, 20, 7, 30, 16, 9, 24, 11):
+        eng.submit(rng.integers(1, cfg.vocab_size, size=n).astype(np.int32),
+                   max_new=steps + 2)
+    eng.step()  # warm
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        eng.step()
+    dt = (time.perf_counter() - t0) / steps
+
+    # dense baseline: batch-8 decode_step
+    caches = m.init_caches(8, 64)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (8, 40)), jnp.int32)
+    _, caches = m.prefill(params, toks, caches)
+    ln = jnp.full((8,), 40, jnp.int32)
+    tok = toks[:, -1:]
+    lg, caches = m.decode_step(params, tok, caches, ln)  # warm
+    t0 = time.perf_counter()
+    for i in range(steps):
+        lg, caches = m.decode_step(params, tok, caches, ln)
+    jax.block_until_ready(lg)
+    dense = (time.perf_counter() - t0) / steps
+    return {"paged_step_s": dt, "dense_step_s": dense,
+            "pager": dict(eng.pager.stats)}
+
+
+def main(quick=True):
+    r = run(steps=5 if quick else 20)
+    print(f"serve/paged_step,{r['paged_step_s']*1e6:.0f},us_per_step")
+    print(f"serve/dense_step,{r['dense_step_s']*1e6:.0f},us_per_step")
+    s = r["pager"]
+    print(f"serve/pager_searches,{s['searches']},"
+          f"hops_per_search={s['hops']/max(s['searches'],1):.2f}")
+    return r
+
+
+if __name__ == "__main__":
+    main(quick=False)

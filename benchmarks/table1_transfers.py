@@ -1,0 +1,74 @@
+"""Table 1 reproduction: memory-transfer profile during 100% search.
+
+The paper profiles cache misses with Valgrind; we count transfers exactly in
+the ideal-cache model (DESIGN.md §2): elements touched ("load count" analog)
+and distinct B-element blocks per search ("LLC miss" analog), for:
+  - ΔTree UB=127 (dynamic vEB, the paper's best),
+  - ΔTree UB=N (one giant ΔNode = leaf-oriented static vEB),
+  - static vEB monolith (VTMtree: values at internal nodes),
+  - pointer BST (Synchrobench tree analog), sorted array.
+Tree pre-filled with 1,048,576 random keys in (0, 5e6] (paper's setup).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import TreeConfig, bulk_build
+from repro.core import baselines as BL
+from repro.core.transfers import delta_touch_fn
+from repro.core.baselines import count_block_transfers
+
+KEY_MAX = 5_000_000
+INITIAL = 1 << 20
+
+
+def _mean_loads(touch_fn, keys) -> float:
+    return float(np.mean([len(touch_fn(int(k))) for k in keys]))
+
+
+def run(n_queries: int = 300, initial_size: int = INITIAL):
+    rng = np.random.default_rng(44)
+    vals = np.unique(rng.integers(1, KEY_MAX, size=initial_size)
+                     .astype(np.int32))
+    q = rng.integers(1, KEY_MAX, size=n_queries).astype(np.int32)
+    rows = []
+
+    # ΔTree UB=127 (dynamic vEB)
+    cfg = TreeConfig(height=7, max_dnodes=1 << 17, buf_cap=16)
+    t = bulk_build(cfg, vals)
+    tf = delta_touch_fn(cfg, t)
+    rows.append(("deltatree_ub127", _mean_loads(tf, q),
+                 count_block_transfers(tf, q, 16),
+                 count_block_transfers(tf, q, 128)))
+
+    # ΔTree UB=N: one ΔNode covering everything = leaf-oriented static vEB
+    h_big = int(np.ceil(np.log2(vals.size))) + 2
+    cfg_big = TreeConfig(height=h_big, max_dnodes=4, buf_cap=16)
+    t_big = bulk_build(cfg_big, vals)
+    tfb = delta_touch_fn(cfg_big, t_big)
+    rows.append((f"deltatree_ubN(h={h_big})", _mean_loads(tfb, q),
+                 count_block_transfers(tfb, q, 16),
+                 count_block_transfers(tfb, q, 128)))
+
+    for Bl in (BL.StaticVEB, BL.PointerBST, BL.SortedArray):
+        st = Bl.build(vals)
+        tf = Bl.touch_fn(st)
+        rows.append((Bl.name, _mean_loads(tf, q),
+                     count_block_transfers(tf, q, 16),
+                     count_block_transfers(tf, q, 128)))
+    return rows
+
+
+def main(quick=True):
+    rows = run(n_queries=150 if quick else 500,
+               initial_size=(1 << 17) if quick else INITIAL)
+    for name, loads, b16, b128 in rows:
+        print(f"table1/{name}/loads,{loads:.2f},elements")
+        print(f"table1/{name}/blocks_B16,{b16:.2f},transfers")
+        print(f"table1/{name}/blocks_B128,{b128:.2f},transfers")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,51 @@
+"""§5 UB selection sweep: ΔNode size ∈ {31, 127, 1023, 8191} — the paper
+finds one "page" (127) best on its CPU; on TPU the tradeoff is DMA size vs
+tree hops (DESIGN.md §2, claim C4)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_deltatree
+from repro.core import TreeConfig, bulk_build
+from repro.core.transfers import delta_touch_fn, delta_hops_fn
+from repro.core.baselines import count_block_transfers
+
+KEY_MAX = 5_000_000
+HEIGHTS = (5, 7, 10, 13)      # UB = 31, 127, 1023, 8191
+
+
+def run(initial_size: int = 200_000, total_ops: int = 20_000,
+        update_pct: float = 5.0):
+    rng = np.random.default_rng(45)
+    vals = np.unique(rng.integers(1, KEY_MAX, size=initial_size)
+                     .astype(np.int32))
+    q = rng.integers(1, KEY_MAX, size=200).astype(np.int32)
+    rows = []
+    for h in HEIGHTS:
+        ub = 2**h - 1
+        dnodes_needed = max(64, int(4 * vals.size / 2 ** (h - 1)))
+        cfg = TreeConfig(height=h, max_dnodes=dnodes_needed, buf_cap=32)
+        t = bulk_build(cfg, vals)
+        tf = delta_touch_fn(cfg, t)
+        hops = delta_hops_fn(cfg, t)
+        mean_hops = float(np.mean([hops(int(k)) for k in q]))
+        b128 = count_block_transfers(tf, q, 128)
+        perf = run_deltatree(h, vals, KEY_MAX, update_pct, 1024, total_ops,
+                             max_dnodes=dnodes_needed)
+        rows.append((ub, mean_hops, b128, perf["ops_per_s"]))
+    return rows
+
+
+def main(quick=True):
+    rows = run(initial_size=100_000 if quick else 500_000,
+               total_ops=10_000 if quick else 50_000)
+    for ub, hops, b128, ops in rows:
+        print(f"ub_sweep/UB{ub}/hops,{hops:.2f},dnode_transfers")
+        print(f"ub_sweep/UB{ub}/blocks_B128,{b128:.2f},transfers")
+        print(f"ub_sweep/UB{ub}/throughput,{1e6/ops:.3f},{ops:.0f} ops/s")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,55 @@
+"""Serving example: continuous batching over the ΔTree-paged KV cache.
+
+    JAX_ENABLE_X64=1 PYTHONPATH=src python examples/serve_paged.py
+
+Shows: request submission, page allocation (ΔTree inserts), batched decode
+via the Pallas paged-attention kernel with block tables resolved by
+wait-free ΔTree searches, and page reclamation on finish (ΔTree deletes +
+Merge compaction).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # packed int64 ΔTree map mode
+
+import numpy as np  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models.registry import api  # noqa: E402
+from repro.serving import PagerConfig, ServeEngine  # noqa: E402
+
+
+def main():
+    cfg = get_smoke_config("granite_8b")
+    m = api(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    pc = PagerConfig(num_pages=128, page_size=8, max_seqs=32, max_blocks=64,
+                     tree_height=5)
+    eng = ServeEngine(cfg, params, pc, max_batch=8)
+
+    rng = np.random.default_rng(0)
+    print("submitting 5 requests (prompt lens 6..34)...")
+    for n in (6, 14, 22, 9, 34):
+        sid = eng.submit(rng.integers(1, cfg.vocab_size, n).astype(np.int32),
+                         max_new=8)
+        print(f"  seq {sid}: {n} prompt tokens -> "
+              f"{eng.pager.seq_blocks[sid]} pages")
+
+    for step in range(9):
+        out = eng.step()
+        if out:
+            print(f"step {step}: decoded {out}")
+
+    s = eng.pager.stats
+    print(f"\nΔTree pager hot-path stats: {s['searches']} searches "
+          f"({s['hops']/max(s['searches'],1):.2f} ΔNode hops each), "
+          f"{s['inserts']} page inserts, {s['deletes']} page frees")
+    print(f"pages free after completion: {len(eng.pager.free_pages)}"
+          f"/{pc.num_pages}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Roofline terms from a compiled dry-run artifact (assignment §Roofline).
+
+All quantities are PER-DEVICE (the compiled module is the post-SPMD
+per-partition program), which is equivalent to the assignment's
+global/chips formulation:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = wire_bytes_per_device / ICI_bw
+
+`collective_bytes` is not in cost_analysis(); we parse the post-optimization
+HLO and model per-device wire traffic per op with ring formulas:
+  all-reduce        2 * bytes * (n-1)/n
+  all-gather            bytes * (n-1)/n          (bytes = result, i.e. the
+                                                  gathered per-device output)
+  reduce-scatter        bytes * (n-1)            (bytes = result = operand/n)
+  all-to-all            bytes * (n-1)/n
+  collective-permute    bytes
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * nb
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return default
+
+
+def collective_stats(hlo_text: str, default_group: int = 2) -> dict:
+    """Per-device wire bytes by collective kind from post-SPMD HLO text."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        if "replica_groups" not in line and "collective-permute" not in line:
+            continue
+        mm = _COLL_RE.search(line)
+        tuples = []
+        if mm:
+            kind = mm.group(3)
+            tuples.append((mm.group(1), mm.group(2)))
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if not mt:
+                continue
+            kind = mt.group(2)
+            for part in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", mt.group(1)):
+                tuples.append((part.group(1), part.group(2)))
+        bytes_ = sum(_shape_bytes(d, s) for d, s in tuples)
+        n = _group_size(line, default_group)
+        if kind == "all-reduce":
+            wire = 2 * bytes_ * (n - 1) / n
+        elif kind == "all-gather":
+            wire = bytes_ * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = bytes_ * (n - 1)
+        elif kind == "all-to-all":
+            wire = bytes_ * (n - 1) / n
+        else:
+            wire = bytes_
+        out[kind] += wire
+        counts[kind] += 1
+    return {"wire_bytes": out, "counts": counts,
+            "total_wire_bytes": sum(out.values())}
+
+
+@dataclass
+class Roofline:
+    flops: float            # per device
+    hbm_bytes: float        # per device
+    wire_bytes: float       # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_device: float
+    useful_flops_ratio: float
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def roofline_terms(cost: dict, coll: dict, model_flops_global: float,
+                   n_chips: int) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    wire = float(coll["total_wire_bytes"])
+    terms = {
+        "compute": flops / PEAK_FLOPS_BF16,
+        "memory": hbm / HBM_BW,
+        "collective": wire / ICI_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_global / n_chips
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], bottleneck=bottleneck,
+        model_flops_per_device=mf,
+        useful_flops_ratio=(mf / flops) if flops else 0.0,
+    )
+
+
+def model_flops(cfg, shape_kind: str, n_tokens: int, n_params: int,
+                n_active_params: int) -> float:
+    """6·N_active·D train, 2·N_active·D inference (assignment §Roofline;
+    N_active = N for dense archs)."""
+    if shape_kind == "train":
+        return 6.0 * n_active_params * n_tokens
+    return 2.0 * n_active_params * n_tokens
+
+
+def active_params(cfg, n_params: int) -> int:
+    """Subtract non-routed expert weights for MoE archs."""
+    if not cfg.moe_experts:
+        return n_params
+    moe_layers = sum(
+        1 for i in range(cfg.num_layers) if cfg.ffn_kind(i) == "moe"
+    )
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    unused = moe_layers * per_expert * (cfg.moe_experts - cfg.moe_top_k)
+    return n_params - unused

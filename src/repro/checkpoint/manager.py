@@ -1,0 +1,132 @@
+"""Sharded checkpointing with atomic commit, async save, and resharding
+restore (the elastic-scaling path; DESIGN.md §6).
+
+Format: one .npy per pytree leaf (path-encoded filename) + manifest.json
+(step, tree structure, shapes/dtypes, mesh shape, data cursor).  Commit is
+write-to-tmp → fsync → atomic rename, so a crash mid-save never corrupts
+the latest checkpoint.  `restore` rebuilds global arrays and `device_put`s
+them with the *target* mesh's shardings — restoring a 4-way checkpoint onto
+a 2-way (or 512-way) mesh is the same code path (lose a pod → restart on
+the single-pod mesh from the same files).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}[{i}]"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten_into(skeleton, flat):
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}.{k}" if prefix else str(k))
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(
+                walk(v, f"{prefix}[{i}]") for i, v in enumerate(node))
+        return flat[prefix]
+    return walk(skeleton)
+
+
+def latest_step(ckpt_dir) -> int | None:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*") if p.is_dir()]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir, keep_last: int = 3, async_save: bool = True):
+        self.dir = Path(ckpt_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- saving ---
+
+    def save(self, step: int, tree, extra: dict | None = None):
+        """Snapshot to host (blocking) then write (async by default)."""
+        flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, extra or {}), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat, extra or {})
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: dict, extra: dict):
+        tmp = self.dir / f".tmp_step_{step}_{os.getpid()}"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(), "extra": extra,
+                    "leaves": {}}
+        for k, v in flat.items():
+            fn = k.replace("/", "_") + ".npy"
+            np.save(tmp / fn, v)
+            manifest["leaves"][k] = {
+                "file": fn, "shape": list(v.shape), "dtype": str(v.dtype)}
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic commit
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(p for p in self.dir.glob("step_*") if p.is_dir())
+        for p in steps[: -self.keep_last]:
+            shutil.rmtree(p, ignore_errors=True)
+
+    # ------------------------------------------------------------ restore ---
+
+    def restore(self, step: int | None, skeleton, shardings=None):
+        """Load into the skeleton pytree; device_put with target shardings
+        (resharding restore). Returns (step, tree, extra)."""
+        if step is None:
+            step = latest_step(self.dir)
+            assert step is not None, f"no checkpoints under {self.dir}"
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat = {}
+        for k, meta in manifest["leaves"].items():
+            arr = np.load(d / meta["file"])
+            flat[k] = arr
+        tree = _unflatten_into(skeleton, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.device_put, tree)
+        return manifest["step"], tree, manifest.get("extra", {})

@@ -1,0 +1,47 @@
+"""ΔTree core — the paper's contribution (dynamic vEB layout + concurrent
+search tree semantics), implemented as batched functional JAX.
+
+Public API:
+    TreeConfig, DeltaTree, empty, bulk_build,
+    search_batch, search_jit, update_batch,
+    OP_SEARCH, OP_INSERT, OP_DELETE,
+    layout (vEB math), live_keys (debug).
+"""
+
+from repro.core import layout
+from repro.core.deltatree import (
+    OP_DELETE,
+    lookup_batch,
+    lookup_jit,
+    live_items,
+    OP_INSERT,
+    OP_SEARCH,
+    DeltaTree,
+    TreeConfig,
+    bulk_build,
+    empty,
+    live_keys,
+    search_batch,
+    successor_jit,
+    search_jit,
+    update_batch,
+)
+
+__all__ = [
+    "layout",
+    "TreeConfig",
+    "DeltaTree",
+    "empty",
+    "bulk_build",
+    "live_keys",
+    "search_batch",
+    "successor_jit",
+    "lookup_batch",
+    "lookup_jit",
+    "live_items",
+    "search_jit",
+    "update_batch",
+    "OP_SEARCH",
+    "OP_INSERT",
+    "OP_DELETE",
+]

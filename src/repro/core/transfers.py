@@ -1,0 +1,62 @@
+"""Ideal-cache transfer accounting for the ΔTree (Table 1 / Lemma 2.1 analog).
+
+The paper measures cache misses with Valgrind; on TPU (and in this CPU
+container) we instead count memory transfers *exactly* in the ideal-cache
+model the paper's analysis uses: replay the search path host-side, record
+every element index read, and count distinct B-element blocks.
+
+The flat address space models the arena layout: ΔNode ``dn`` occupies
+elements ``[dn*stride, dn*stride + UB)`` with the vEB permutation inside —
+i.e., exactly the bytes a TPU DMA of that ΔNode row would move.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import layout
+from repro.core.deltatree import DeltaTree, TreeConfig
+from repro.core.layout import EMPTY
+
+
+def delta_touch_fn(cfg: TreeConfig, t: DeltaTree):
+    """Host-side replay of `deltatree._descend` returning touched flat
+    element indices (for `baselines.count_block_transfers`)."""
+    pos = np.asarray(layout.veb_pos_table(cfg.height))
+    value = np.asarray(t.value)
+    child = np.asarray(t.child)
+    root = int(t.root)
+    bottom0 = cfg.bottom0
+    stride = cfg.ub  # contiguous rows; block-aligned per ΔNode
+
+    def touched(key: int) -> list[int]:
+        dn, b, out = root, 1, []
+        while True:
+            out.append(dn * stride + int(pos[b]))
+            at_bottom = b >= bottom0
+            if at_bottom:
+                ch = child[dn, b - bottom0]
+                if ch >= 0:
+                    dn, b = int(ch), 1
+                    continue
+                break
+            left_val = value[dn, pos[2 * b]]
+            if left_val == EMPTY:
+                break  # leaf
+            out.append(dn * stride + int(pos[2 * b]))  # leaf-test read
+            b = 2 * b + (1 if key >= value[dn, pos[b]] else 0)
+        return out
+
+    return touched
+
+
+def delta_hops_fn(cfg: TreeConfig, t: DeltaTree):
+    """ΔNode-visit count per search (each visit ≤ 2 block transfers of size
+    ≥ UB, Lemma 2.1)."""
+    touch = delta_touch_fn(cfg, t)
+    stride = cfg.ub
+
+    def hops(key: int) -> int:
+        return len({i // stride for i in touch(key)})
+
+    return hops

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, Pipeline, batch_at_step
+
+__all__ = ["DataConfig", "Pipeline", "batch_at_step"]

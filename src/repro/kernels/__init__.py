@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+- veb_search.py            — in-ΔNode vEB walk (the paper's search loop)
+- delta_paged_attention.py — ΔTree-paged decode attention (serving path)
+- ops.py                   — jit'd drivers/wrappers (public API)
+- ref.py                   — pure-jnp oracles (test ground truth)
+
+All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU with interpret=True against ref.py.
+"""
+
+from repro.kernels.ops import delta_contains, delta_search, paged_decode_attention
+
+__all__ = ["delta_search", "delta_contains", "paged_decode_attention"]

@@ -1,0 +1,94 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+- `delta_search`       — multi-round driver for veb_search: sort queries by
+  their current ΔNode, run the level kernel (one scalar-prefetched ΔNode row
+  DMA per query tile), hop, repeat until every query lands on its leaf.
+- `delta_contains`     — full paper SEARCHNODE semantics on top (mark bit +
+  overflow buffer check).
+- `paged_decode_attention` — re-exported from delta_paged_attention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout
+from repro.kernels.delta_paged_attention import paged_decode_attention  # noqa: F401
+from repro.kernels.veb_search import pad_arena, veb_walk_rows
+
+
+@functools.partial(
+    jax.jit, static_argnames=("height", "q_tile", "max_rounds", "interpret")
+)
+def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
+                 queries: jax.Array, *, height: int, q_tile: int = 256,
+                 max_rounds: int = 64, interpret: bool = True):
+    """Multi-hop ΔTree search via the Pallas walk kernel, in lockstep rounds:
+    each round gathers the frontier's ΔNode rows (one contiguous DMA per
+    query — the paper's "memory transfer") and descends them fully in VMEM.
+
+    value/child may be unpadded arena arrays; rows are 128-padded here.
+    Returns (leaf_val, leaf_b, final_dn) per query (same contract as
+    `kernels.ref.ref_delta_search`).
+    """
+    value_p, child_p = pad_arena(value, child)
+    k = queries.shape[0]
+    kp = (k + q_tile - 1) // q_tile * q_tile
+    qpad = jnp.pad(queries, (0, kp - k))
+
+    state = dict(
+        dn=jnp.full((kp,), root, jnp.int32),
+        resolved=jnp.zeros((kp,), jnp.bool_),
+        leaf_val=jnp.zeros((kp,), jnp.int32),
+        leaf_b=jnp.ones((kp,), jnp.int32),
+        final_dn=jnp.full((kp,), root, jnp.int32),
+        rounds=jnp.int32(0),
+    )
+
+    def cond(s):
+        return jnp.any(~s["resolved"]) & (s["rounds"] < max_rounds)
+
+    def body(s):
+        dnc = jnp.clip(s["dn"], 0, value.shape[0] - 1)
+        rows = value_p[dnc]          # (K, UBp) — the per-query ΔNode DMA
+        childrows = child_p[dnc]
+        lv, lb, nxt = veb_walk_rows(
+            rows, childrows, qpad, height=height, q_tile=q_tile,
+            interpret=interpret,
+        )
+        act = ~s["resolved"]
+        done_now = act & (nxt < 0)
+        return dict(
+            dn=jnp.where(act & (nxt >= 0), nxt, s["dn"]),
+            resolved=s["resolved"] | done_now,
+            leaf_val=jnp.where(done_now, lv, s["leaf_val"]),
+            leaf_b=jnp.where(done_now, lb, s["leaf_b"]),
+            final_dn=jnp.where(done_now, s["dn"], s["final_dn"]),
+            rounds=s["rounds"] + 1,
+        )
+
+    state = jax.lax.while_loop(cond, body, state)
+    return state["leaf_val"][:k], state["leaf_b"][:k], state["final_dn"][:k]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("height", "q_tile", "max_rounds", "interpret")
+)
+def delta_contains(value: jax.Array, mark: jax.Array, child: jax.Array,
+                   buf: jax.Array, root: jax.Array, queries: jax.Array, *,
+                   height: int, q_tile: int = 256, max_rounds: int = 64,
+                   interpret: bool = True):
+    """Paper SEARCHNODE on top of the kernel walk: leaf match & ~mark, else
+    the ΔNode's overflow buffer (paper Fig. 8 lines 9..17)."""
+    pos = jnp.asarray(layout.veb_pos_table(height))
+    lv, lb, dn = delta_search(
+        value, child, root, queries,
+        height=height, q_tile=q_tile, max_rounds=max_rounds, interpret=interpret,
+    )
+    leaf_hit = lv == queries
+    leaf_live = leaf_hit & ~mark[dn, pos[lb]]
+    in_buf = jnp.any(buf[dn] == queries[:, None], axis=1)
+    return jnp.where(leaf_hit, leaf_live, in_buf)

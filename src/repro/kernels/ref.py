@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout
+from repro.core.layout import EMPTY
+
+
+@functools.partial(jax.jit, static_argnames=("height",))
+def ref_delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
+                     queries: jax.Array, *, height: int):
+    """Oracle for the multi-hop ΔTree search over (value, child) arena rows.
+
+    Returns (leaf_val, leaf_b, final_dn) per query — identical contract to
+    `kernels.ops.delta_search`.
+    """
+    pos = jnp.asarray(layout.veb_pos_table(height))
+    bottom0 = 2 ** (height - 1)
+
+    def one(v):
+        def cond(s):
+            return ~s[2]
+
+        def body(s):
+            dn, b, _ = s
+            at_bottom = b >= bottom0
+            left = jnp.where(
+                at_bottom, EMPTY, value[dn, pos[jnp.minimum(2 * b, 2 * bottom0 - 1)]]
+            )
+            internal = (~at_bottom) & (left != EMPTY)
+            router = value[dn, pos[b]]
+            slot = jnp.where(at_bottom, b - bottom0, 0)
+            ch = jnp.where(at_bottom, child[dn, slot], jnp.int32(-1))
+            hop = at_bottom & (ch >= 0)
+            nb = jnp.where(internal, 2 * b + (v >= router).astype(jnp.int32), b)
+            nb = jnp.where(hop, jnp.int32(1), nb)
+            ndn = jnp.where(hop, ch, dn)
+            done = (~internal) & (~hop)
+            return ndn, nb, done
+
+        dn, b, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(root), jnp.int32(1), jnp.bool_(False))
+        )
+        return value[dn, pos[b]], b, dn
+
+    return jax.vmap(one)(queries)
+
+
+@jax.jit
+def ref_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               seq_lens: jax.Array):
+    """Oracle for ΔTree-paged decode attention.
+
+    q:            (B, QH, D)
+    k/v_pages:    (NP, PS, KVH, D)
+    block_tables: (B, MAXP) int32 physical page ids (-1 = unused)
+    seq_lens:     (B,) int32
+
+    Gathers each sequence's pages into a contiguous (S, KVH, D) cache, then
+    runs masked GQA decode attention in f32. Returns (B, QH, D) in q.dtype.
+    """
+    b, qh, d = q.shape
+    np_, ps, kvh, _ = k_pages.shape
+    maxp = block_tables.shape[1]
+    g = qh // kvh
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    bt = jnp.maximum(block_tables, 0)
+    k = k_pages[bt]  # (B, MAXP, PS, KVH, D)
+    v = v_pages[bt]
+    k = k.reshape(b, maxp * ps, kvh, d).astype(jnp.float32)
+    v = v.reshape(b, maxp * ps, kvh, d).astype(jnp.float32)
+
+    qf = q.reshape(b, kvh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k) * scale
+    mask = jnp.arange(maxp * ps)[None, :] < seq_lens[:, None]  # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return out.reshape(b, qh, d).astype(q.dtype)

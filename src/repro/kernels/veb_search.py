@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: batched search inside ΔNodes (the paper's hot loop).
+
+TPU mapping of the paper's locality argument (DESIGN.md §2): each query's
+current ΔNode row (UB keys in vEB order, padded to a 128-lane multiple) is
+gathered HBM→VMEM — one contiguous DMA per ΔNode, the dynamic-vEB pointer
+hop realized as a data-dependent row gather.  Inside the kernel the whole
+walk is VREG arithmetic: implicit complete-BST position math plus the
+compile-time vEB permutation table, vectorized across the query tile.
+
+The multi-ΔNode walk runs in lockstep rounds at the JAX level
+(`ops.delta_search`): gather rows for the query frontier, run this kernel
+(one full in-ΔNode descent per query), hop to the child ΔNode, repeat.
+Round count = ΔNode-depth of the tree = the paper's O(log_B N) transfer
+bound — each round is exactly one "memory transfer" per query.
+
+The serving-path sibling kernel (`delta_paged_attention`) shows the same
+indirection done with scalar-prefetched `BlockSpec index_map` DMA instead
+of a pre-gather; both are TPU-idiomatic realizations of a pointer hop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import layout
+from repro.core.layout import EMPTY
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _kernel(height: int,
+            pos_ref, q_ref, rows_ref, childrows_ref,
+            leaf_val_ref, leaf_b_ref, next_dn_ref):
+    h = height
+    bottom0 = 2 ** (h - 1)
+    pos = pos_ref[...]                                   # vEB permutation
+    v = q_ref[...]                                       # (QT,)
+    rows = rows_ref[...]                                 # (QT, UBp) VMEM
+
+    def take(b):
+        # per-lane gather rows[i, pos[b[i]]]
+        return jnp.take_along_axis(rows, pos[b][:, None], axis=1)[:, 0]
+
+    b = jnp.ones_like(v)
+    # fully unrolled H-1 level walk — pure VREG work on VMEM-resident rows
+    for _ in range(h - 1):
+        router = take(b)
+        left = take(jnp.minimum(2 * b, 2 * bottom0 - 1))
+        internal = (b < bottom0) & (left != EMPTY)
+        step = (v >= router).astype(b.dtype)
+        b = jnp.where(internal, 2 * b + step, b)
+
+    leaf_val = take(b)
+    at_bottom = b >= bottom0
+    slot = jnp.where(at_bottom, b - bottom0, 0)
+    child = jnp.take_along_axis(childrows_ref[...], slot[:, None], axis=1)[:, 0]
+    nxt = jnp.where(at_bottom, child, jnp.int32(-1))
+
+    leaf_val_ref[...] = leaf_val
+    leaf_b_ref[...] = b
+    next_dn_ref[...] = nxt
+
+
+@functools.partial(jax.jit, static_argnames=("height", "q_tile", "interpret"))
+def veb_walk_rows(rows: jax.Array, childrows: jax.Array, queries: jax.Array,
+                  *, height: int, q_tile: int = 256, interpret: bool = True):
+    """One full in-ΔNode descent per query.
+
+    rows:      (K, UBp) int32 — each query's current ΔNode row (vEB order)
+    childrows: (K, CP)  int32 — matching bottom-slot child ids (-1 none)
+    queries:   (K,)     int32, K % q_tile == 0
+
+    Returns (leaf_val, leaf_b, next_dn), each (K,) int32; next_dn = -1 when
+    the walk ends inside this ΔNode.
+    """
+    k = queries.shape[0]
+    assert k % q_tile == 0, (k, q_tile)
+    n_tiles = k // q_tile
+    ubp = rows.shape[1]
+    cp = childrows.shape[1]
+
+    pos = jnp.asarray(layout.veb_pos_table(height))
+    posp = _round_up(pos.shape[0], 128)
+    pos = jnp.pad(pos, (0, posp - pos.shape[0]))
+
+    out_shape = [jax.ShapeDtypeStruct((k,), jnp.int32)] * 3
+    return pl.pallas_call(
+        functools.partial(_kernel, height),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((posp,), lambda i: (0,)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((q_tile, ubp), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, cp), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((q_tile,), lambda i: (i,))] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pos, queries, rows, childrows)
+
+
+def pad_arena(value: jax.Array, child: jax.Array):
+    """Pad arena rows to 128-lane multiples for the kernel."""
+    ubp = _round_up(value.shape[1], 128)
+    cp = _round_up(child.shape[1], 128)
+    value_p = jnp.pad(value, ((0, 0), (0, ubp - value.shape[1])))
+    child_p = jnp.pad(child, ((0, 0), (0, cp - child.shape[1])),
+                      constant_values=-1)
+    return value_p, child_p

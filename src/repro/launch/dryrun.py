@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment MULTI-POD DRY-RUN): lower + compile every
+(arch × shape × mesh) cell against ShapeDtypeStruct inputs on the 16×16
+single-pod and 2×16×16 multi-pod production meshes; record
+memory_analysis / cost_analysis / collective schedule for §Roofline.
+
+The XLA_FLAGS line above MUST stay the first statement — jax locks the
+device count on first init.  Do not import this module from tests.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b \
+      --shape train_4k --mesh pod1 --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod1
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import roofline as R
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import SHAPES, api, input_specs, shape_applicable
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel import shardings as SH
+from repro.parallel.ax import logical_rules
+from repro.train import make_train_step
+
+
+def _mesh_chips(mesh):
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               extra_cfg: dict | None = None, accum_steps: int = 1):
+    """Lower + compile one cell. Returns (record, compiled, lowered)."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if extra_cfg:
+        cfg = dataclasses.replace(cfg, **extra_cfg)
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "pod2" if multi_pod else "pod1",
+                "status": "skipped", "reason": why}, None, None
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = _mesh_chips(mesh)
+    m = api(cfg)
+    kind, specs = input_specs(cfg, shape_name)
+    seq, gbatch, _ = SHAPES[shape_name]
+
+    params_shape = jax.eval_shape(m.init_params, jax.random.key(0))
+    pspecs = SH.param_specs(params_shape)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_shape))
+    n_active = R.active_params(cfg, n_params)
+
+    named = lambda tree: SH.to_named(tree, mesh)
+
+    t0 = time.time()
+    with mesh, logical_rules(mesh):
+        if kind == "train":
+            ocfg = AdamWConfig(state_dtype="bfloat16")
+            opt_shape = jax.eval_shape(lambda p: adamw_init(ocfg, p), params_shape)
+            ospecs = SH.opt_specs(pspecs)
+            bspec = {
+                k: SH.batch_spec(mesh, gbatch, len(v.shape)) for k, v in specs.items()
+            }
+            step = make_train_step(cfg, ocfg, accum_steps=accum_steps)
+            jitted = jax.jit(
+                step,
+                in_shardings=(named(pspecs), named(ospecs), named(bspec)),
+                out_shardings=(named(pspecs), named(ospecs), None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, specs)
+            n_tokens = gbatch * seq
+        elif kind == "prefill":
+            cspecs = SH.cache_specs(specs["caches"], mesh)
+            bsp = {k: SH.batch_spec(mesh, gbatch, len(jax.tree.leaves(v)[0].shape)
+                                    if k == "caches" else len(v.shape))
+                   for k, v in specs.items() if k != "caches"}
+
+            if cfg.family == "audio":
+                fn = lambda p, tokens, frames, caches: m.prefill(
+                    p, tokens, frames, caches)
+                args = (params_shape, specs["tokens"], specs["frames"],
+                        specs["caches"])
+                in_sh = (named(pspecs), named(bsp["tokens"]),
+                         named(bsp["frames"]), named(cspecs))
+            elif cfg.family == "vlm":
+                fn = lambda p, tokens, ve, caches: m.prefill(
+                    p, tokens, caches, vision_embeds=ve)
+                args = (params_shape, specs["tokens"], specs["vision_embeds"],
+                        specs["caches"])
+                in_sh = (named(pspecs), named(bsp["tokens"]),
+                         named(bsp["vision_embeds"]), named(cspecs))
+            else:
+                fn = lambda p, tokens, caches: m.prefill(p, tokens, caches)
+                args = (params_shape, specs["tokens"], specs["caches"])
+                in_sh = (named(pspecs), named(bsp["tokens"]), named(cspecs))
+            jitted = jax.jit(fn, in_shardings=in_sh,
+                             out_shardings=(None, named(cspecs)),
+                             donate_argnums=(len(args) - 1,))
+            lowered = jitted.lower(*args)
+            n_tokens = gbatch * seq
+        else:  # decode
+            cspecs = SH.cache_specs(specs["caches"], mesh)
+            tok_sp = SH.batch_spec(mesh, gbatch, 2)
+            len_sp = SH.batch_spec(mesh, gbatch, 1)
+            fn = lambda p, token, caches, length: m.decode_step(
+                p, token, caches, length)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(named(pspecs), named(tok_sp), named(cspecs),
+                              named(len_sp)),
+                out_shardings=(None, named(cspecs)),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_shape, specs["token"],
+                                   specs["caches"], specs["length"])
+            n_tokens = gbatch  # one token per sequence
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = R.collective_stats(hlo)
+    mf = R.model_flops(cfg, kind, n_tokens, n_params, n_active)
+    rf = R.roofline_terms(cost, coll, mf, n_chips)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2" if multi_pod else "pod1",
+        "status": "ok",
+        "step_kind": kind,
+        "n_chips": n_chips,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "n_tokens_global": n_tokens,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+        },
+        "cost_analysis": {
+            k: float(v)
+            for k, v in (cost or {}).items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed")
+                or k.startswith("bytes accessed")
+            )
+        },
+        "collectives": coll,
+        "roofline": rf.as_dict(),
+        "accum_steps": accum_steps,
+        "_probe": {  # raw terms for depth extrapolation
+            "flops": float(cost.get("flops", 0.0)),
+            "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+            "wire_bytes": float(coll["total_wire_bytes"]),
+        },
+    }
+    return rec, compiled, lowered
+
+
+def _probe_layers(cfg, r: int) -> dict:
+    """Config override with r pattern-repetitions (plus prologue)."""
+    over = {"num_layers": cfg.dense_layers + r * cfg.pattern_period}
+    if cfg.encoder_layers:
+        over["encoder_layers"] = r
+    return over
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             accum_steps: int = 8, extra_cfg: dict | None = None):
+    """Full compile (memory proof) + two shallow depth probes whose
+    cost_analysis/collective terms are affine-extrapolated to full depth
+    (lax.scan bodies are counted once by cost_analysis; probes at reps=1,2
+    compile unrolled, so terms are exact at those depths and affine in
+    depth).  Probes use accum_steps=1 (same total math)."""
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "pod2" if multi_pod else "pod1",
+                "status": "skipped", "reason": why}
+
+    _, _, kind = None, None, input_specs(cfg, shape_name)[0]
+    accum = accum_steps if kind == "train" else 1
+    rec, compiled, lowered = lower_cell(
+        arch, shape_name, multi_pod, extra_cfg=extra_cfg, accum_steps=accum)
+    del compiled, lowered
+
+    probes = []
+    for r in (1, 2):
+        over = _probe_layers(cfg, r)
+        # exact-counting substitutions (same math, no inner while loops):
+        # naive attention instead of kv-chunk-scanned flash; vectorized SSD
+        over.update({"unroll": True, "flash_threshold": 1 << 30,
+                     "ssd_vectorized": True})
+        over.update(extra_cfg or {})
+        p, c, l = lower_cell(arch, shape_name, multi_pod, extra_cfg=over,
+                             accum_steps=1)
+        probes.append(p)
+        del c, l
+    reps_full = (cfg.num_layers - cfg.dense_layers) // cfg.pattern_period
+    extra = {}
+    for key in ("flops", "hbm_bytes", "wire_bytes"):
+        f1, f2 = probes[0]["_probe"][key], probes[1]["_probe"][key]
+        extra[key] = max(f1 + (f2 - f1) * (reps_full - 1), f1)
+    n_chips = rec["n_chips"]
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    terms = {
+        "compute_s": extra["flops"] / PEAK_FLOPS_BF16,
+        "memory_s": extra["hbm_bytes"] / HBM_BW,
+        "collective_s": extra["wire_bytes"] / ICI_BW,
+    }
+    bottleneck = max(terms, key=terms.get).replace("_s", "")
+    mf_dev = rec["roofline"]["model_flops_per_device"]
+    rec["roofline_extrapolated"] = {
+        **{k: extra[k] for k in extra},
+        **terms,
+        "bottleneck": bottleneck,
+        "model_flops_per_device": mf_dev,
+        "useful_flops_ratio": mf_dev / extra["flops"] if extra["flops"] else 0.0,
+        "probe_reps": [1, 2],
+        "reps_full": reps_full,
+    }
+    rec["probe_compile_s"] = [p["compile_s"] for p in probes]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--block-skip", action="store_true",
+                    help="causal block-skip flash schedule (§Perf)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    for arch, shape_name in cells:
+        tag = f"{arch.replace('.', '_')}__{shape_name}__{args.mesh}"
+        fp = outdir / f"{tag}.json"
+        if fp.exists() and not args.force:
+            print(f"[skip existing] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape_name, args.mesh == "pod2")
+            if rec["status"] == "ok":
+                rx = rec["roofline_extrapolated"]
+                print(f"  compile {rec['compile_s']}s  "
+                      f"flops/dev {rx['flops']:.3e}  "
+                      f"bottleneck {rx['bottleneck']}  "
+                      f"useful {rx['useful_flops_ratio']:.2f}")
+                print(f"  memory_analysis: args "
+                      f"{rec['memory']['argument_size_bytes']} temp "
+                      f"{rec['memory']['temp_size_bytes']}")
+            else:
+                print(f"  SKIPPED: {rec['reason']}")
+        except Exception as e:  # record the failure; the sweep continues
+            rec = {"arch": arch, "shape": shape_name, "mesh": args.mesh,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"  ERROR: {rec['error']}")
+        fp.write_text(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

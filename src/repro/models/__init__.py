@@ -1,0 +1,1 @@
+"""Model substrate: configs, layers, transformer / enc-dec assemblies."""

@@ -1,0 +1,177 @@
+"""Per-layer block assembly: pre-norm mixer (attn | MLA | SSD) + FFN
+(MLP | MoE) with residuals.  A block's *kind* is static (from the config's
+layer pattern); its params are stacked over pattern repetitions and scanned
+by transformer.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import mamba2 as m2
+from repro.models.layers.attention import (
+    attn_out,
+    attn_train,
+    decode_attention,
+    init_attention,
+    qkv_proj,
+)
+from repro.models.layers.basic import init_mlp, init_rmsnorm, mlp_apply, rmsnorm_apply
+from repro.models.layers.mla import init_mla, mla_decode, mla_prefill, mla_train
+from repro.models.layers.moe import init_moe, moe_apply
+from repro.parallel.ax import constrain
+
+
+def block_kinds(cfg: ModelConfig, i: int) -> tuple[str, str]:
+    return cfg.layer_kind(i), cfg.ffn_kind(i)
+
+
+def _has_ffn(cfg: ModelConfig, ffn_kind: str) -> bool:
+    return ffn_kind == "moe" or cfg.d_ff > 0
+
+
+def init_block(key, cfg: ModelConfig, layer_idx: int):
+    mixer_kind, ffn_kind = block_kinds(cfg, layer_idx)
+    k1, k2 = jax.random.split(key)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    if mixer_kind == "attn":
+        p["mixer"] = init_mla(k1, cfg) if cfg.mla else init_attention(k1, cfg)
+    else:
+        p["mixer"] = m2.init_mamba2(k1, cfg)
+    if _has_ffn(cfg, ffn_kind):
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        p["ffn"] = init_moe(k2, cfg) if ffn_kind == "moe" else init_mlp(
+            k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _ffn(params, cfg: ModelConfig, kind: str, x):
+    return moe_apply(params, cfg, x) if kind == "moe" else mlp_apply(params, x)
+
+
+# --------------------------------------------------------------- training ---
+
+
+def block_train(params, cfg: ModelConfig, kinds: tuple[str, str], x, positions,
+                causal: bool = True):
+    mixer_kind, ffn_kind = kinds
+    h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+    if mixer_kind == "attn":
+        if cfg.mla:
+            y = mla_train(params["mixer"], cfg, h, positions, causal=causal)
+        else:
+            y = attn_train(params["mixer"], cfg, h, positions, causal=causal)
+    else:
+        y = m2.mamba2_train(params["mixer"], cfg, h)
+    x = x + y
+    x = constrain(x, "batch", "seq", "embed")
+    if _has_ffn(cfg, ffn_kind):
+        h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        x = x + _ffn(params["ffn"], cfg, ffn_kind, h)
+    return constrain(x, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------- caching ---
+
+
+def init_block_cache(cfg: ModelConfig, kinds, batch: int, max_len: int, dtype):
+    """Zero cache pytree for one block."""
+    mixer_kind, _ = kinds
+    if mixer_kind == "attn":
+        if cfg.mla:
+            return {
+                "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+    return {
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, m2.conv_dim(cfg)), dtype),
+    }
+
+
+def block_prefill(params, cfg: ModelConfig, kinds, x, positions, cache):
+    """Run the block over a full prompt, filling `cache` in [0, S)."""
+    mixer_kind, ffn_kind = kinds
+    s = x.shape[1]
+    h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+    if mixer_kind == "attn":
+        if cfg.mla:
+            y, ckv, krope = mla_prefill(params["mixer"], cfg, h, positions)
+            cache = dict(cache)
+            cache["ckv"] = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+            cache["krope"] = jax.lax.dynamic_update_slice(
+                cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0))
+        else:
+            q, k, v = qkv_proj(params["mixer"], cfg, h, positions)
+            from repro.models.layers.attention import attention_naive, flash_attention
+            if s > cfg.flash_threshold:
+                o = flash_attention(q, k, v, causal=True, q_chunk=cfg.attn_chunk,
+                                    kv_chunk=cfg.attn_chunk)
+            else:
+                o = attention_naive(q, k, v, causal=True)
+            y = attn_out(params["mixer"], o)
+            cache = dict(cache)
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    else:
+        y, state, conv = m2.mamba2_prefill(params["mixer"], cfg, h)
+        cache = {"state": state, "conv": conv.astype(cache["conv"].dtype)}
+    x = x + y
+    if _has_ffn(cfg, ffn_kind):
+        h2 = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        x = x + _ffn(params["ffn"], cfg, ffn_kind, h2)
+    return x, cache
+
+
+def block_decode(params, cfg: ModelConfig, kinds, x, positions, cache, length):
+    """Single-token step. x: (B,1,D); length: (B,) tokens already cached."""
+    mixer_kind, ffn_kind = kinds
+    b = x.shape[0]
+    h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+    if mixer_kind == "attn":
+        if cfg.mla:
+            y, ckv, krope = mla_decode(
+                params["mixer"], cfg, h, positions, cache["ckv"], cache["krope"],
+                length)
+            cache = {"ckv": ckv, "krope": krope}
+        else:
+            q, k, v = qkv_proj(params["mixer"], cfg, h, positions)
+            if cfg.decode_uniform_length:
+                # synchronized-batch decode: one dynamic_update_slice along
+                # seq (writes B*KVH*HD elements) instead of a batched
+                # scatter that op-level accounting charges as a full cache
+                # rewrite (§Perf cell C iteration 2)
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), length[0], axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), length[0], axis=1)
+            else:
+                rows = jnp.arange(b)
+                kc = cache["k"].at[rows, length].set(k[:, 0].astype(cache["k"].dtype))
+                vc = cache["v"].at[rows, length].set(v[:, 0].astype(cache["v"].dtype))
+            kc = constrain(kc, "batch", "decode_seq", None, None)
+            vc = constrain(vc, "batch", "decode_seq", None, None)
+            o = decode_attention(q, kc, vc, length + 1)
+            y = attn_out(params["mixer"], o)
+            cache = {"k": kc, "v": vc}
+    else:
+        y, state, conv = m2.mamba2_decode(
+            params["mixer"], cfg, h, cache["state"], cache["conv"])
+        cache = {"state": state, "conv": conv}
+    x = x + y
+    if _has_ffn(cfg, ffn_kind):
+        h2 = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        x = x + _ffn(params["ffn"], cfg, ffn_kind, h2)
+    return x, cache

@@ -1,0 +1,206 @@
+"""GQA attention: naive (tests), chunked-flash (train/prefill), decode.
+
+Chunked flash = online-softmax over KV chunks (lax.scan) per Q chunk.  Two
+schedules:
+  - `block_skip=False`: lax.map over Q chunks, every KV chunk computed and
+    masked — one compact scan body (small HLO), 2× causal FLOPs waste.
+  - `block_skip=True` : python loop over Q chunks, each scanning only the
+    causally-visible KV prefix — halves causal FLOPs at the cost of a per-
+    chunk HLO body.  (§Perf iterates on this trade-off.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers.basic import _normal, rope_apply
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, d_model=None):
+    d = d_model or cfg.d_model
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _normal(k1, (d, h * hd), d, dtype),
+        "wk": _normal(k2, (d, kvh * hd), d, dtype),
+        "wv": _normal(k3, (d, kvh * hd), d, dtype),
+        "wo": _normal(k4, (h * hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    return p
+
+
+def qkv_proj(params, cfg: ModelConfig, x, positions, rope: bool = True):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if rope:
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ------------------------------------------------------------------ naive ---
+
+
+def attention_naive(q, k, v, causal: bool, q_offset: int = 0):
+    """q: (B,Sq,H,Dqk), k: (B,Skv,KVH,Dqk), v: (B,Skv,KVH,Dv)."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qf = q.reshape(b, sq, kvh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) / np.sqrt(d)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(skv)[None, :]
+        mask = qpos >= kpos
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------- chunked flash ---
+
+
+def _flash_qchunk(qc, k, v, q_pos0, kv_chunk, causal):
+    """Online softmax for one Q chunk over all KV chunks via lax.scan.
+
+    qc: (B, QC, KVH, G, D) f32-scaled; k/v: (B, Skv, KVH, D).
+    q_pos0: absolute position of qc[0] (int32 scalar or python int).
+    """
+    b, qcn, kvh, g, d = qc.shape
+    skv = k.shape[1]
+    nkv = skv // kv_chunk
+    kr = k.reshape(b, nkv, kv_chunk, kvh, -1)
+    vr = v.reshape(b, nkv, kv_chunk, kvh, -1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ki, vi, kvi = inp
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qc, ki.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        if causal:
+            qpos = q_pos0 + jnp.arange(qcn)
+            kpos = kvi * kv_chunk + jnp.arange(kv_chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vi.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, qcn), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, qcn), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, qcn, v.shape[-1]), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kr.swapaxes(0, 1), vr.swapaxes(0, 1), jnp.arange(nkv)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KVH,G,QC,D)
+    return out.transpose(0, 3, 1, 2, 4)           # (B,QC,KVH,G,D)
+
+
+def flash_attention(q, k, v, causal: bool = True, q_chunk: int = 1024,
+                    kv_chunk: int = 1024, block_skip: bool = True):
+    """Chunked online-softmax attention. q: (B,Sq,H,Dqk), k: (B,Skv,KVH,Dqk),
+    v: (B,Skv,KVH,Dv) — Dv may differ from Dqk (MLA)."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kvh
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    if sq % q_chunk or skv % kv_chunk:
+        return attention_naive(q, k, v, causal)
+    nq = sq // q_chunk
+    qs = (q.reshape(b, nq, q_chunk, kvh, g, d).astype(jnp.float32)
+          / np.sqrt(d))
+
+    if block_skip and causal and sq == skv:
+        outs = []
+        for qi in range(nq):  # static python loop — per-chunk KV prefix
+            kv_end = (qi + 1) * q_chunk
+            o = _flash_qchunk(
+                qs[:, qi], k[:, :kv_end], v[:, :kv_end],
+                qi * q_chunk, kv_chunk, causal=True,
+            )
+            outs.append(o)
+        out = jnp.stack(outs, axis=1)
+    else:
+        def per_chunk(args):
+            qi, qc = args
+            return _flash_qchunk(qc, k, v, qi * q_chunk, kv_chunk, causal)
+
+        out = jax.lax.map(per_chunk, (jnp.arange(nq), qs.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1)  # (B, nq, QC, KVH, G, Dv)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- decode ---
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """Single-token decode vs a dense cache.
+
+    q: (B,1,H,D); caches: (B,S,KVH,D); length: (B,) valid prefix lengths.
+
+    The caches stay in their storage dtype inside the dots (f32 accumulation
+    via preferred_element_type) — materializing an f32 copy of a multi-GB
+    cache dominated decode HLO bytes before this (§Perf iteration)."""
+    b, _, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qf = q.reshape(b, kvh, g, d).astype(k_cache.dtype)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache,
+                    preferred_element_type=jnp.float32) / np.sqrt(d)
+    mask = jnp.arange(s)[None, :] < length[:, None]
+    sc = jnp.where(mask[:, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ------------------------------------------------------------ full blocks ---
+
+
+def attn_train(params, cfg: ModelConfig, x, positions, causal=True):
+    b, s, _ = x.shape
+    q, k, v = qkv_proj(params, cfg, x, positions)
+    if s > cfg.flash_threshold:
+        o = flash_attention(q, k, v, causal=causal, q_chunk=cfg.attn_chunk,
+                            kv_chunk=cfg.attn_chunk)
+    else:
+        o = attention_naive(q, k, v, causal=causal)
+    return attn_out(params, o)
+
+
+def attn_out(params, o_bshd):
+    b, s = o_bshd.shape[:2]
+    return jnp.einsum("bse,ed->bsd", o_bshd.reshape(b, s, -1), params["wo"])

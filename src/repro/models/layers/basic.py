@@ -1,0 +1,122 @@
+"""Basic layers: RMSNorm/LayerNorm, RoPE, (Swi)GLU MLP, embeddings.
+
+Pure-functional convention used across the model zoo:
+  init_*(key, ...) -> params (nested dict of arrays, cfg.param_dtype)
+  *_apply(params, x, ...) -> y   (norm math in f32, matmuls in x.dtype)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _normal(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms ---
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE ---
+
+
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:  # (..., S, H, D): broadcast over heads
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP ---
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _normal(k1, (d_model, d_ff), d_model, dtype),
+        "w_up": _normal(k2, (d_model, d_ff), d_model, dtype),
+        "w_down": _normal(k3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def mlp_apply(params, x):
+    """SwiGLU (LLaMA-style)."""
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": _normal(k1, (d_model, d_ff), d_model, dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": _normal(k2, (d_ff, d_model), d_ff, dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp_apply(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["w_in"]) + params["b_in"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"]) + params["b_out"]
+
+
+# ------------------------------------------------------------- embedding ---
+
+
+def init_embedding(key, vocab, d_model, dtype, tie=False):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": _normal(k1, (vocab, d_model), d_model, dtype)}
+    if not tie:
+        p["head"] = _normal(k2, (d_model, vocab), d_model, dtype)
+    return p
+
+
+def embed_apply(params, tokens):
+    return params["tok"][tokens]
+
+
+def logits_apply(params, x, softcap: float = 0.0):
+    if "head" in params:
+        logits = jnp.einsum("...d,dv->...v", x, params["head"])
+    else:
+        logits = jnp.einsum("...d,vd->...v", x, params["tok"])
+    logits = logits.astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

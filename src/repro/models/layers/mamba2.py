@@ -1,0 +1,234 @@
+"""Mamba-2 / SSD (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within-chunk quadratic form (the "attention-like"
+dual) + inter-chunk state recurrence via lax.scan.  `ssd_ref` is the naive
+sequential recurrence used as the test oracle.  Single-token decode keeps a
+(B, H, P, N) state and a (B, w-1, conv_dim) conv cache.
+
+Block layout follows Mamba-2: in_proj → [z | x | B | C | dt], causal
+depthwise conv over [x|B|C], SiLU, SSD, gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers.basic import _normal
+
+LOG_EPS = -80.0
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cd = conv_dim(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": _normal(ks[0], (d, 2 * di + 2 * n + h), d, dtype),
+        "conv_w": _normal(ks[1], (cfg.conv_width, cd), cfg.conv_width, dtype),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),         # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "w_out": _normal(ks[2], (di, d), di, dtype),
+    }
+
+
+def _split_in(cfg: ModelConfig, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(params, xbc, cache=None):
+    """Depthwise causal conv over time. xbc: (B,S,C). cache: (B,w-1,C)."""
+    w = params["conv_w"].shape[0]
+    if cache is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = cache.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * params["conv_w"][i][None, None]
+        for i in range(w)
+    )
+    out = out + params["conv_b"]
+    new_cache = xp[:, -(w - 1):, :] if w > 1 else None
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype), new_cache
+
+
+def _gated_out(params, cfg: ModelConfig, y, z, x_dtype):
+    """y * silu(z) -> grouped RMSNorm -> out_proj."""
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + cfg.norm_eps) * params["gate_norm"].astype(jnp.float32)
+    return jnp.einsum("bsi,id->bsd", g.astype(x_dtype), params["w_out"])
+
+
+def ssd_chunked(cfg: ModelConfig, xh, b_, c_, dt, a_log, d_skip, state0=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P); b_/c_: (B,S,N); dt: (B,S,H) post-softplus; returns
+    (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s0, h, p = xh.shape
+    n = b_.shape[-1]
+    q = min(cfg.ssm_chunk, s0)
+    # pad to a chunk multiple with dt=0 (decay=1, zero input: state-exact)
+    s = -(-s0 // q) * q
+    if s != s0:
+        pad = [(0, 0), (0, s - s0)]
+        xh = jnp.pad(xh, pad + [(0, 0), (0, 0)])
+        b_ = jnp.pad(b_, pad + [(0, 0)])
+        c_ = jnp.pad(c_, pad + [(0, 0)])
+        dt = jnp.pad(dt, pad + [(0, 0)])
+    nc = s // q
+
+    a = -jnp.exp(a_log)                                   # (H,)
+    loga = (dt * a[None, None]).astype(jnp.float32)       # (B,S,H) = log decay
+    xc = xh.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    bc = b_.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    lac = loga.reshape(bsz, nc, q, h)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    init_state = (jnp.zeros((bsz, h, n, p), jnp.float32) if state0 is None
+                  else state0.transpose(0, 1, 3, 2).astype(jnp.float32))
+
+    if cfg.ssd_vectorized:
+        # Fully vectorized over chunks: exact cost_analysis flop counting for
+        # the dry-run probes (a lax.scan body is only counted once).  Not
+        # used at runtime — the (B,nc,Q,Q,H) tensor is chunk-scan-bounded in
+        # the production path below.
+        lcum = jnp.cumsum(lac, axis=2)                    # (B,nc,Q,H)
+        ltot = lcum[:, :, -1]
+        cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)
+        ldiff = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]
+        decay = jnp.exp(jnp.where(tri[None, None, :, :, None], ldiff, LOG_EPS))
+        m = cb[..., None] * decay * dtc[:, :, None, :, :]
+        y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc)
+        t = jnp.exp(lcum[:, :, -1:, :] - lcum) * dtc
+        chunk_in = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", t, bc, xc)
+
+        def state_body(s_prev, inp):
+            ci, lt = inp
+            return s_prev * jnp.exp(lt)[:, :, None, None] + ci, s_prev
+
+        s_last, s_before = jax.lax.scan(
+            state_body, init_state,
+            (chunk_in.swapaxes(0, 1), ltot.swapaxes(0, 1)))
+        s_before = s_before.swapaxes(0, 1)
+        y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", cc, jnp.exp(lcum),
+                             s_before)
+        y = y_intra + y_inter + d_skip[None, None, :, None] * xc
+        y = y.reshape(bsz, s, h, p)[:, :s0]
+        return y, s_last.transpose(0, 1, 3, 2)
+
+    def scan_body(s_prev, inp):
+        # one chunk: intra quadratic + inter from carried state.  Keeping the
+        # (B,Q,Q,H) tensors inside the scan bounds live memory to one chunk.
+        xck, bck, cck, dtk, lak = inp
+        lcum = jnp.cumsum(lak, axis=1)                    # (B,Q,H) inclusive
+        ltot = lcum[:, -1]                                # (B,H)
+        # M[i,j] = (C_i . B_j) * exp(L_i - L_j) * dt_j, j <= i
+        cb = jnp.einsum("bin,bjn->bij", cck, bck)         # (B,Q,Q)
+        ldiff = lcum[:, :, None, :] - lcum[:, None, :, :]  # (B,Q,Q,H)
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], ldiff, LOG_EPS))
+        m = cb[..., None] * decay * dtk[:, None, :, :]    # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xck)
+        # inter: C_i . (exp(L_i) * S_prev)
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp", cck, jnp.exp(lcum), s_prev)
+        # state update
+        t = jnp.exp(ltot[:, None] - lcum) * dtk           # (B,Q,H)
+        chunk_in = jnp.einsum("bjh,bjn,bjhp->bhnp", t, bck, xck)
+        s_new = s_prev * jnp.exp(ltot)[:, :, None, None] + chunk_in
+        return s_new, y_intra + y_inter
+
+    s_last, ys = jax.lax.scan(
+        scan_body, init_state,
+        (xc.swapaxes(0, 1), bc.swapaxes(0, 1), cc.swapaxes(0, 1),
+         dtc.swapaxes(0, 1), lac.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1) + d_skip[None, None, :, None] * xc
+    y = y.reshape(bsz, s, h, p)[:, :s0]
+    return y, s_last.transpose(0, 1, 3, 2)                # (B,H,P,N)
+
+
+def ssd_ref(cfg: ModelConfig, xh, b_, c_, dt, a_log, d_skip):
+    """Naive sequential recurrence (test oracle)."""
+    bsz, s, h, p = xh.shape
+    n = b_.shape[-1]
+    a = -jnp.exp(a_log)
+
+    def step(state, inp):
+        x_t, b_t, c_t, dt_t = inp
+        decay = jnp.exp(dt_t * a)                          # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t, b_t, x_t)
+        state = state * decay[:, :, None, None] + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (
+        xh.swapaxes(0, 1).astype(jnp.float32),
+        b_.swapaxes(0, 1).astype(jnp.float32),
+        c_.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, s0, xs)
+    y = ys.swapaxes(0, 1) + d_skip[None, None, :, None] * xh.astype(jnp.float32)
+    return y
+
+
+def _pre_ssd(params, cfg: ModelConfig, x, conv_cache=None):
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xbc, dt_raw = _split_in(cfg, proj)
+    xbc, new_conv = _causal_conv(params, xbc, conv_cache)
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xin = xbc[..., :di].reshape(*x.shape[:2], h, p)
+    b_ = xbc[..., di : di + n]
+    c_ = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    return z, xin, b_, c_, dt, new_conv
+
+
+def mamba2_train(params, cfg: ModelConfig, x):
+    """x: (B,S,D) -> (B,S,D)."""
+    z, xin, b_, c_, dt, _ = _pre_ssd(params, cfg, x)
+    y, _ = ssd_chunked(cfg, xin, b_, c_, dt, params["a_log"], params["d_skip"])
+    y = y.reshape(*x.shape[:2], cfg.d_inner).astype(x.dtype)
+    return _gated_out(params, cfg, y, z, x.dtype)
+
+
+def mamba2_prefill(params, cfg: ModelConfig, x):
+    """Returns (y, ssd_state (B,H,P,N), conv_cache (B,w-1,CD))."""
+    z, xin, b_, c_, dt, conv_cache = _pre_ssd(params, cfg, x)
+    y, state = ssd_chunked(cfg, xin, b_, c_, dt, params["a_log"], params["d_skip"])
+    y = y.reshape(*x.shape[:2], cfg.d_inner).astype(x.dtype)
+    return _gated_out(params, cfg, y, z, x.dtype), state, conv_cache
+
+
+def mamba2_decode(params, cfg: ModelConfig, x, state, conv_cache):
+    """Single-token step. x: (B,1,D); state: (B,H,P,N); conv: (B,w-1,CD)."""
+    z, xin, b_, c_, dt, new_conv = _pre_ssd(params, cfg, x, conv_cache)
+    a = -jnp.exp(params["a_log"])
+    dt1 = dt[:, 0]                                        # (B,H)
+    decay = jnp.exp(dt1 * a)                              # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, b_[:, 0].astype(jnp.float32),
+                     xin[:, 0].astype(jnp.float32))
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_[:, 0].astype(jnp.float32))
+    y = y + params["d_skip"][None, :, None] * xin[:, 0].astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, cfg.d_inner).astype(x.dtype)
+    return _gated_out(params, cfg, y, z, x.dtype), state, new_conv

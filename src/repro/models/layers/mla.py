@@ -1,0 +1,155 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a per-token latent `c_kv` (kv_lora_rank) plus one shared
+RoPE key (qk_rope_dim).  Decode caches ONLY (c_kv, k_rope) — 576 elements
+per token for DS-V2 vs 2*H*D for vanilla MHA — and absorbs the up-projection
+matrices into the query / output path (the "weight absorption" trick), so
+decode attention runs entirely in latent space.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers.basic import _normal, init_rmsnorm, rmsnorm_apply, rope_apply
+
+NEG_INF = -1e30
+
+
+def init_mla(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    qn, qr, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl, ql = cfg.kv_lora_rank, cfg.q_lora_rank
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "wkv_a": _normal(ks[0], (d, kvl + qr), d, dtype),
+        "kv_norm": init_rmsnorm(kvl, dtype),
+        "wkv_b": _normal(ks[1], (kvl, h * (qn + vh)), kvl, dtype),
+        "wo": _normal(ks[2], (h * vh, d), h * vh, dtype),
+    }
+    if ql > 0:
+        p["wq_a"] = _normal(ks[3], (d, ql), d, dtype)
+        p["q_norm"] = init_rmsnorm(ql, dtype)
+        p["wq_b"] = _normal(ks[4], (ql, h * (qn + qr)), ql, dtype)
+    else:
+        p["wq"] = _normal(ks[5], (d, h * (qn + qr)), d, dtype)
+    return p
+
+
+def _queries(params, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    h, qn, qr = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank > 0:
+        cq = rmsnorm_apply(params["q_norm"],
+                           jnp.einsum("bsd,dr->bsr", x, params["wq_a"]),
+                           cfg.norm_eps)
+        q = jnp.einsum("bsr,re->bse", cq, params["wq_b"])
+    else:
+        q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    q = q.reshape(b, s, h, qn + qr)
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = rope_apply(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(params, cfg: ModelConfig, x, positions):
+    kvl, qr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = jnp.einsum("bsd,de->bse", x, params["wkv_a"])
+    c_kv = rmsnorm_apply(params["kv_norm"], kv[..., :kvl], cfg.norm_eps)
+    k_rope = rope_apply(kv[..., kvl:], positions, cfg.rope_theta)  # (B,S,qr)
+    return c_kv, k_rope
+
+
+def mla_train(params, cfg: ModelConfig, x, positions, causal=True):
+    """Training/prefill form.  Short sequences use the materialized S×S
+    softmax; long sequences fold the shared RoPE key into per-head keys
+    (q' = [q_nope|q_rope], k' = [k_nope|k_rope⊗1_H]) and run the chunked
+    online-softmax flash path — O(S·chunk) live memory instead of the
+    O(H·S²) score blow-up (§Perf hillclimb #1; EXPERIMENTS.md)."""
+    b, s, _ = x.shape
+    h, qn, qr, vh = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    kvb = jnp.einsum("bsr,re->bse", c_kv, params["wkv_b"]).reshape(b, s, h, qn + vh)
+    k_nope, v = kvb[..., :qn], kvb[..., qn:]
+
+    if s > cfg.flash_threshold:
+        from repro.models.layers.attention import flash_attention
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)          # (B,S,H,qn+qr)
+        kk = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, qr))],
+            axis=-1)
+        o = flash_attention(qq, kk, v, causal=causal,
+                            q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+        o = o.reshape(b, s, h * vh)
+        return jnp.einsum("bse,ed->bsd", o, params["wo"])
+
+    scale = 1.0 / np.sqrt(qn + qr)
+    sc = (
+        jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                   k_nope.astype(jnp.float32))
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) * scale
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    o = o.reshape(b, s, h * vh).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", o, params["wo"])
+
+
+def mla_prefill(params, cfg: ModelConfig, x, positions):
+    """Prefill: returns output + latent cache (c_kv, k_rope)."""
+    y = mla_train(params, cfg, x, positions, causal=True)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    return y, c_kv, k_rope
+
+
+def mla_decode(params, cfg: ModelConfig, x, positions, ckv_cache, krope_cache,
+               length):
+    """Absorbed decode: attention entirely in latent space.
+
+    x: (B,1,D); caches: (B,S,kvl), (B,S,qr); length: (B,).
+    """
+    b, _, _ = x.shape
+    h, qn, qr, vh = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    smax = ckv_cache.shape[1]
+
+    q_nope, q_rope = _queries(params, cfg, x, positions)      # (B,1,H,*)
+    c_kv_new, k_rope_new = _latents(params, cfg, x, positions)
+    # write this token's latent at position `length` (scatter — in-place
+    # under buffer donation)
+    rows = jnp.arange(b)
+    ckv_cache = ckv_cache.at[rows, length].set(
+        c_kv_new[:, 0].astype(ckv_cache.dtype))
+    krope_cache = krope_cache.at[rows, length].set(
+        k_rope_new[:, 0].astype(krope_cache.dtype))
+
+    wkv_b = params["wkv_b"].reshape(kvl, h, qn + vh)
+    w_uk = wkv_b[..., :qn]                                    # (kvl, H, qn)
+    w_uv = wkv_b[..., qn:]                                    # (kvl, H, vh)
+
+    # absorb W_uk into q: q_lat (B,H,kvl)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(qn + qr)
+    sc = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, ckv_cache.astype(jnp.float32))
+        + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                     krope_cache.astype(jnp.float32))
+    ) * scale
+    mask = jnp.arange(smax)[None] <= length[:, None]          # include self
+    sc = jnp.where(mask[:, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * vh).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", o, params["wo"])
+    return y, ckv_cache, krope_cache

@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.optim.compress import dequantize_int8, quantize_int8
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+    "quantize_int8", "dequantize_int8",
+]

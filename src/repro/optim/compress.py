@@ -1,0 +1,43 @@
+"""Int8 gradient/delta compression for the slow cross-pod hop.
+
+Per-tensor symmetric int8 quantization with an f32 scale.  Used by the
+DiLoCo-style cross-pod sync in train.py: the inner SPMD all-reduce stays
+full-precision intra-pod; the (infrequent) cross-pod parameter-delta
+exchange is compressed 4× (bf16→int8 would be 2×; vs f32 master it is 4×).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_pmean(tree, axis_name: str):
+    """int8-compressed mean over a mesh axis (use inside shard_map).
+
+    Quantize locally, all-gather the int8 payload (the wire format stays
+    int8 — 4× less inter-pod traffic than f32, 2× less than bf16), then
+    dequantize each shard with its own scale and average locally.  Exact
+    w.r.t. the per-shard quantization (no scale mixing).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(x):
+        q, s = quantize_int8(x)
+        qs = jax.lax.all_gather(q, axis_name)            # (n, ...) int8 wire
+        ss = jax.lax.all_gather(s, axis_name)            # (n,) f32 (tiny)
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+        return (deq.sum(axis=0) / n).astype(x.dtype)
+
+    return jax.tree.map(one, tree)

@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding rules, param shardings,
+sharded decode attention (split-K), collective helpers."""

@@ -1,0 +1,161 @@
+"""Parameter / cache / batch PartitionSpecs for the production mesh.
+
+Scheme (DESIGN.md §5): TP on "model" (heads / FFN hidden / experts / vocab),
+FSDP on "data" for every large matrix (params replicated across "pod";
+cross-pod traffic is gradient-only), batch on ("pod","data").  Stacked
+scan params carry a leading (reps,) axis that is never sharded.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# name -> spec over the *trailing* dims (leading stack axes padded with None)
+_TRAILING_RULES: dict[str, tuple] = {
+    # embedding
+    "tok": ("model", "data"),        # (V, D)
+    "head": ("data", "model"),       # (D, V)
+    # attention
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    # MLA
+    "wq_a": ("data", "model"),
+    "wq_b": ("data", "model"),
+    "wkv_a": ("data", None),
+    "wkv_b": ("data", "model"),
+    # MLP (rank 2) / MoE experts (rank 3) — dispatched on rank below
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    "w_in": ("data", "model"),
+    "b_in": ("model",),
+    "w_out": ("model", "data"),
+    "b_out": (None,),
+    "router": (None, None),
+    # mamba2
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "a_log": (None,),
+    "d_skip": (None,),
+    "dt_bias": (None,),
+    "gate_norm": (None,),
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+}
+
+_MOE_RULES = {  # rank-3 expert tensors: EP on "model", FSDP inside expert
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+def _leaf_spec(name: str, leaf, in_moe: bool) -> P:
+    base = None
+    if in_moe and name in _MOE_RULES:
+        base = _MOE_RULES[name]
+    elif name in _TRAILING_RULES:
+        base = _TRAILING_RULES[name]
+    if base is None:
+        return P()
+    pad = leaf.ndim - len(base)
+    assert pad >= 0, (name, leaf.ndim, base)
+    return P(*((None,) * pad + tuple(base)))
+
+
+def param_specs(params_shape) -> object:
+    """PartitionSpec pytree matching a params (shape) pytree.
+
+    MoE expert tensors are recognized by a sibling "router" entry (robust
+    to scan-stacking changing ranks)."""
+
+    def walk(node, in_moe=False):
+        if isinstance(node, dict):
+            moe_here = "router" in node
+            return {
+                k: (walk(v, moe_here) if isinstance(v, (dict, list, tuple))
+                    else _leaf_spec(k, v, moe_here))
+                for k, v in node.items()
+            }
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, in_moe) for v in node)
+        return P()
+
+    return walk(params_shape)
+
+
+def opt_specs(pspecs):
+    """AdamW state specs: moments shard like params; step replicated."""
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def _cache_leaf_spec(path: tuple, leaf) -> P:
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    last = names[-1]
+    nd = leaf.ndim
+    trailing = {
+        # (B, S, KVH, HD): shard cache length on "model" (split-K decode)
+        "k": (("pod", "data"), "model", None, None),
+        "v": (("pod", "data"), "model", None, None),
+        "ck": (("pod", "data"), "model", None, None),
+        "cv": (("pod", "data"), "model", None, None),
+        # MLA latent caches (B, S, r)
+        "ckv": (("pod", "data"), "model", None),
+        "krope": (("pod", "data"), "model", None),
+        # SSD state (B, H, P, N) / conv cache (B, w-1, CD)
+        "state": (("pod", "data"), "model", None, None),
+        "conv": (("pod", "data"), None, "model"),
+    }[last]
+    pad = nd - len(trailing)
+    assert pad >= 0, (names, nd)
+    return P(*((None,) * pad + tuple(trailing)))
+
+
+def cache_specs(cache_shape, mesh) -> object:
+    """Decode-cache specs; drops mesh axes whose size doesn't divide dims."""
+    def fix(path, leaf):
+        spec = _cache_leaf_spec(path, leaf)
+        parts = []
+        for dim, ax in zip(leaf.shape, spec):
+            axes = (ax,) if isinstance(ax, str) else (ax or ())
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a] if a in mesh.axis_names else 1
+            keep = tuple(a for a in axes if a in mesh.axis_names)
+            parts.append(keep if dim % max(size, 1) == 0 and keep else None)
+        parts = [p[0] if isinstance(p, tuple) and len(p) == 1 else p for p in parts]
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(fix, cache_shape)
+
+
+def batch_axes(mesh, batch_size: int):
+    """Largest prefix of ("pod","data") whose product divides batch_size."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen, prod = [], 1
+    for a in axes:
+        if batch_size % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    return tuple(chosen)
+
+
+def batch_spec(mesh, batch_size: int, ndim: int) -> P:
+    ax = batch_axes(mesh, batch_size)
+    first = ax if len(ax) > 1 else (ax[0] if ax else None)
+    return P(*((first,) + (None,) * (ndim - 1)))
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,4 @@
+from repro.serving.pager import DeltaPager, PagerConfig
+from repro.serving.engine import ServeEngine
+
+__all__ = ["DeltaPager", "PagerConfig", "ServeEngine"]

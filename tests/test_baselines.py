@@ -1,0 +1,60 @@
+"""Baseline search structures (paper §5 comparison set)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.baselines import (
+    HashTable, PointerBST, SortedArray, StaticVEB, count_block_transfers,
+    OP_INSERT, OP_DELETE,
+)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(2)
+    vals = np.unique(rng.integers(1, 50_000, size=4000).astype(np.int32))
+    q = rng.integers(1, 50_000, size=1000).astype(np.int32)
+    return rng, vals, q
+
+
+@pytest.mark.parametrize("B", [SortedArray, StaticVEB, PointerBST, HashTable])
+def test_search_membership(B, data):
+    rng, vals, q = data
+    st = B.build(vals)
+    got = np.asarray(B.search(st, jnp.asarray(q)))
+    np.testing.assert_array_equal(got, np.isin(q, vals))
+
+
+@pytest.mark.parametrize("B", [SortedArray, PointerBST])
+def test_updates(B, data):
+    rng, vals, q = data
+    st = B.build(vals)
+    s = set(vals.tolist())
+    kinds = rng.choice([OP_INSERT, OP_DELETE], size=64).astype(np.int32)
+    keys = rng.integers(1, 50_000, size=64).astype(np.int32)
+    st, res = B.update(st, jnp.asarray(kinds), jnp.asarray(keys))
+    exp = np.zeros(64, bool)
+    for i, (k, v) in enumerate(zip(kinds, keys)):
+        v = int(v)
+        if k == OP_INSERT:
+            exp[i] = v not in s
+            s.add(v)
+        else:
+            exp[i] = v in s
+            s.discard(v)
+    np.testing.assert_array_equal(np.asarray(res), exp)
+    got = np.asarray(B.search(st, jnp.asarray(q)))
+    np.testing.assert_array_equal(got, np.isin(q, np.asarray(sorted(s))))
+
+
+def test_transfer_ordering(data):
+    """Paper's Table 1 story: pointer-chasing touches the most blocks; the
+    vEB layouts the fewest."""
+    rng, vals, q = data
+    B = 64
+    res = {}
+    for Bl in (SortedArray, StaticVEB, PointerBST):
+        st = Bl.build(vals)
+        res[Bl.name] = count_block_transfers(Bl.touch_fn(st), q[:200], B)
+    assert res["static_veb"] < res["sorted_array"] < res["pointer_bst"], res

@@ -1,0 +1,156 @@
+"""ΔTree behaviour vs the set/map oracle + structural invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    TreeConfig, bulk_build, empty, live_keys, search_jit, update_batch,
+)
+from repro.core import layout
+from repro.core.oracle import SetOracle, OP_INSERT, OP_DELETE
+
+
+def check_invariants(cfg: TreeConfig, t) -> None:
+    """Structural invariants I1-I5 from the module docstring."""
+    pos = np.asarray(layout.veb_pos_table(cfg.height))
+    value = np.asarray(t.value)
+    child = np.asarray(t.child)
+    buf = np.asarray(t.buf)
+    alive = np.asarray(t.alive)
+    nlive = np.asarray(t.nlive)
+    mark = np.asarray(t.mark)
+    parent = np.asarray(t.parent)
+    pslot = np.asarray(t.pslot)
+    bottom0 = cfg.bottom0
+    rl = int(np.asarray(cfg.route_left))
+
+    assert int(np.asarray(t.bcount).sum()) == 0, "I5: buffers drained"
+    assert (buf == layout.EMPTY).all(), "I5"
+
+    for dn in range(cfg.max_dnodes):
+        if not alive[dn]:
+            assert (value[dn] == layout.EMPTY).all()
+            continue
+        count_live = 0
+        for b in range(1, 2**cfg.height):
+            v = value[dn, pos[b]]
+            if b % 2 == 1 and b > 1 and v != layout.EMPTY:
+                assert value[dn, pos[b - 1]] != layout.EMPTY, (
+                    "I2", dn, b)  # odd occupied => even sibling occupied
+            if b >= bottom0 and child[dn, b - bottom0] >= 0:
+                assert v != layout.EMPTY, ("I3", dn, b)
+                cid = child[dn, b - bottom0]
+                assert alive[cid] and parent[cid] == dn and \
+                    pslot[cid] == b - bottom0, ("child link", dn, b)
+            at_bottom = b >= bottom0
+            left = layout.EMPTY if at_bottom else value[dn, pos[2 * b]]
+            is_leaf = at_bottom or left == layout.EMPTY
+            if is_leaf and v not in (layout.EMPTY, rl) and not mark[dn, pos[b]]:
+                if not (at_bottom and child[dn, b - bottom0] >= 0):
+                    count_live += 1
+        assert count_live == nlive[dn], ("nlive", dn, count_live, nlive[dn])
+
+
+@pytest.mark.parametrize("height,nsteps", [(3, 15), (4, 20), (7, 12)])
+def test_random_ops_vs_oracle(height, nsteps):
+    cfg = TreeConfig(height=height, max_dnodes=4096, buf_cap=16)
+    rng = np.random.default_rng(height)
+    t = empty(cfg)
+    oracle = SetOracle()
+    for step in range(nsteps):
+        K = 24
+        kinds = rng.integers(1, 3, size=K).astype(np.int32)
+        keys = rng.integers(1, 150, size=K).astype(np.int32)
+        found, _ = search_jit(cfg, t, jnp.asarray(keys))
+        assert (np.asarray(found) == oracle.snapshot_search(keys)).all()
+        t, res, rounds = update_batch(cfg, t, jnp.asarray(kinds),
+                                      jnp.asarray(keys))
+        exp = oracle.apply_updates(kinds, keys)
+        assert (np.asarray(res) == exp).all(), step
+        assert not bool(t.alloc_fail)
+        assert int(rounds) < cfg.max_rounds
+        assert (live_keys(cfg, t) == oracle.keys()).all()
+    check_invariants(cfg, t)
+
+
+def test_merge_reclaims_dnodes():
+    cfg = TreeConfig(height=5, max_dnodes=2048, buf_cap=32)
+    rng = np.random.default_rng(0)
+    vals = np.unique(rng.integers(1, 50_000, size=3000).astype(np.int32))
+    t = bulk_build(cfg, vals)
+    n0 = int(np.asarray(t.alive).sum())
+    oracle = SetOracle(vals)
+    todel = rng.permutation(vals)[: int(0.9 * vals.size)]
+    for chunk in np.array_split(todel, 20):
+        kinds = np.full(chunk.size, OP_DELETE, np.int32)
+        t, res, _ = update_batch(cfg, t, jnp.asarray(kinds), jnp.asarray(chunk))
+        assert bool(np.asarray(res).all())
+        oracle.apply_updates(kinds, chunk)
+    n1 = int(np.asarray(t.alive).sum())
+    # Merge is sibling-local (paper Fig. 10): it reclaims leaf-level ΔNodes
+    # but never collapses interior ones, so expect substantial-not-total
+    # reclamation after deleting 90% of keys.
+    assert n1 <= 0.6 * n0, (n0, n1)
+    assert (live_keys(cfg, t) == oracle.keys()).all()
+    check_invariants(cfg, t)
+
+
+def test_bulk_build_and_search():
+    cfg = TreeConfig(height=7, max_dnodes=1 << 12, buf_cap=16)
+    rng = np.random.default_rng(1)
+    vals = np.unique(rng.integers(1, 1_000_000, size=40_000).astype(np.int32))
+    t = bulk_build(cfg, vals)
+    q = rng.integers(1, 1_000_000, size=2000).astype(np.int32)
+    f, hops = search_jit(cfg, t, jnp.asarray(q))
+    assert (np.asarray(f) == np.isin(q, vals)).all()
+    # O(log_B N): a 40k-key tree with UB=127 must resolve in <= 4 hops
+    assert int(np.asarray(hops).max()) <= 4
+    check_invariants(cfg, t)
+
+
+def test_delete_then_reinsert_revives():
+    cfg = TreeConfig(height=4, max_dnodes=128, buf_cap=8)
+    t = empty(cfg)
+    ins = lambda t, k: update_batch(
+        cfg, t, jnp.asarray([OP_INSERT], np.int32), jnp.asarray([k], np.int32))
+    dele = lambda t, k: update_batch(
+        cfg, t, jnp.asarray([OP_DELETE], np.int32), jnp.asarray([k], np.int32))
+    t, r, _ = ins(t, 42); assert bool(r[0])
+    t, r, _ = ins(t, 42); assert not bool(r[0])   # duplicate
+    t, r, _ = dele(t, 42); assert bool(r[0])
+    t, r, _ = dele(t, 42); assert not bool(r[0])  # already deleted
+    t, r, _ = ins(t, 42); assert bool(r[0])       # revive
+    f, _ = search_jit(cfg, t, jnp.asarray([42], np.int32))
+    assert bool(f[0])
+
+
+def test_successor_queries():
+    """Ordered-dictionary extension: successor == sorted-array successor,
+    including around tombstones and after maintenance churn."""
+    import numpy as np
+    from repro.core.deltatree import successor_jit
+
+    cfg = TreeConfig(height=5, max_dnodes=4096, buf_cap=16)
+    rng = np.random.default_rng(9)
+    vals = np.unique(rng.integers(1, 100_000, size=3000).astype(np.int32))
+    t = bulk_build(cfg, vals)
+    oracle = SetOracle(vals)
+    # churn: deletes create tombstone routers; inserts grow leaves
+    for _ in range(6):
+        kinds = rng.choice([OP_INSERT, OP_DELETE], size=48).astype(np.int32)
+        keys = np.concatenate([
+            rng.choice(vals, size=24),
+            rng.integers(1, 100_000, size=24),
+        ]).astype(np.int32)[:48]
+        t, _, _ = update_batch(cfg, t, jnp.asarray(kinds), jnp.asarray(keys))
+        oracle.apply_updates(kinds, keys)
+    live = oracle.keys()
+    q = rng.integers(0, 100_001, size=400).astype(np.int32)
+    found, succ = successor_jit(cfg, t, jnp.asarray(q))
+    idx = np.searchsorted(live, q, side="right")
+    exp_found = idx < live.size
+    exp_succ = np.where(exp_found, live[np.minimum(idx, live.size - 1)], 0)
+    np.testing.assert_array_equal(np.asarray(found), exp_found)
+    np.testing.assert_array_equal(
+        np.asarray(succ)[exp_found], exp_succ[exp_found])

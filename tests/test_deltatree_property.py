@@ -1,0 +1,57 @@
+"""Hypothesis property tests: arbitrary op sequences == oracle (paper's
+dictionary semantics), for both set and map modes and several UB sizes."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TreeConfig, empty, live_keys, search_jit, update_batch
+from repro.core.oracle import SetOracle
+from tests.test_deltatree import check_invariants
+
+op_batches = st.lists(
+    st.lists(
+        st.tuples(st.integers(1, 2), st.integers(1, 40)),
+        min_size=1, max_size=12,
+    ),
+    min_size=1, max_size=6,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(batches=op_batches, height=st.sampled_from([3, 4, 5]))
+def test_op_sequences_match_oracle(batches, height):
+    cfg = TreeConfig(height=height, max_dnodes=512, buf_cap=8)
+    t = empty(cfg)
+    oracle = SetOracle()
+    for batch in batches:
+        kinds = np.asarray([k for k, _ in batch], np.int32)
+        keys = np.asarray([v for _, v in batch], np.int32)
+        found, _ = search_jit(cfg, t, jnp.asarray(keys))
+        assert (np.asarray(found) == oracle.snapshot_search(keys)).all()
+        t, res, _ = update_batch(cfg, t, jnp.asarray(kinds), jnp.asarray(keys))
+        exp = oracle.apply_updates(kinds, keys)
+        assert (np.asarray(res) == exp).all()
+        assert not bool(t.alloc_fail)
+    assert (live_keys(cfg, t) == oracle.keys()).all()
+    check_invariants(cfg, t)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    keys=st.lists(st.integers(1, 10_000), min_size=1, max_size=60,
+                  unique=True),
+    height=st.sampled_from([3, 5, 7]),
+)
+def test_insert_all_then_find_all(keys, height):
+    cfg = TreeConfig(height=height, max_dnodes=1024, buf_cap=8)
+    t = empty(cfg)
+    arr = np.asarray(keys, np.int32)
+    for chunk in np.array_split(arr, max(1, len(arr) // 8)):
+        kinds = np.ones(chunk.size, np.int32)
+        t, res, _ = update_batch(cfg, t, jnp.asarray(kinds), jnp.asarray(chunk))
+        assert bool(np.asarray(res).all())
+    f, _ = search_jit(cfg, t, jnp.asarray(arr))
+    assert bool(np.asarray(f).all())
+    assert (np.sort(live_keys(cfg, t)) == np.sort(arr)).all()
+    check_invariants(cfg, t)

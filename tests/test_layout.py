@@ -1,0 +1,68 @@
+"""vEB layout math properties (paper §2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout
+
+
+@pytest.mark.parametrize("h", [1, 2, 3, 4, 5, 7, 10, 13])
+def test_veb_order_is_permutation(h):
+    order = layout.veb_order(h)
+    assert sorted(order) == list(range(1, 2**h))
+
+
+@pytest.mark.parametrize("h", [2, 4, 7, 8])
+def test_veb_recursive_contiguity(h):
+    """At the top split (ht = h//2), the top subtree and each bottom subtree
+    occupy contiguous storage ranges — the defining vEB property."""
+    pos = layout.veb_pos_table(h)
+    ht = h // 2
+    hb = h - ht
+    top_nodes = [b for b in range(1, 2**ht)]
+    top_pos = sorted(int(pos[b]) for b in top_nodes)
+    assert top_pos == list(range(len(top_nodes)))  # top first, contiguous
+    for r in range(2**ht, 2 ** (ht + 1)):
+        sub = []
+        frontier = [r]
+        for _ in range(hb):
+            sub.extend(frontier)
+            frontier = [c for b in frontier for c in (2 * b, 2 * b + 1)
+                        if c < 2**h]
+        sp = sorted(int(pos[b]) for b in sub)
+        assert sp == list(range(sp[0], sp[0] + len(sub))), (h, r)
+
+
+def test_root_first():
+    for h in (1, 3, 6):
+        assert layout.veb_pos_table(h)[1] == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(1, 8), m=st.integers(0, 128), seed=st.integers(0, 99))
+def test_rebuild_bst_property(h, m, seed):
+    """Rebuilt ΔNode rows are valid leaf-oriented BSTs containing exactly
+    the input keys (walked via storage positions)."""
+    m = min(m, 2 ** (h - 1))
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.choice(np.arange(1, 10_000), size=m, replace=False)
+                   ).astype(np.int32)
+    row = layout.rebuild_values_np(h, vals, m)
+    pos = layout.veb_pos_table(h)
+    bottom0 = 2 ** (h - 1)
+
+    def search(key):
+        b = 1
+        while True:
+            at_bottom = b >= bottom0
+            left = layout.EMPTY if at_bottom else row[pos[2 * b]]
+            if at_bottom or left == layout.EMPTY:
+                return row[pos[b]] == key
+            b = 2 * b + (1 if key >= row[pos[b]] else 0)
+
+    for v in vals:
+        assert search(int(v)), (h, m, v)
+    for v in rng.integers(1, 10_000, size=32):
+        if int(v) not in set(vals.tolist()):
+            assert not search(int(v))

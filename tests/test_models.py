@@ -1,0 +1,191 @@
+"""Per-arch smoke tests (assignment: reduced config, one forward/train step
+on CPU, output shapes + no NaNs) and layer-level oracles."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.config import ModelConfig
+from repro.models.registry import api, input_specs, shape_applicable
+from repro.models.layers import mamba2 as m2
+from repro.models.layers.attention import (
+    attention_naive, flash_attention, init_attention, qkv_proj,
+)
+from repro.models.layers.mla import init_mla, mla_decode, mla_prefill, mla_train
+from repro.models.layers.moe import init_moe, moe_apply, moe_ref
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    m = api(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = 2, 32
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_tokens, cfg.d_model)), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    loss, grads = jax.jit(jax.value_and_grad(m.loss_fn))(params, batch)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen1_5_110b", "jamba_1_5_large_398b",
+                                  "mamba2_370m", "deepseek_v2_236b",
+                                  "whisper_base", "internvl2_2b",
+                                  "phi3_5_moe_42b"])
+def test_decode_matches_train_forward(arch):
+    cfg = dataclasses.replace(get_smoke_config(arch), capacity_factor=64.0)
+    m = api(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    B, S, Spre = 2, 24, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    nv = cfg.vision_tokens if cfg.family == "vlm" else 0
+    caches = m.init_caches(B, S + nv)
+    extra = {}
+    if cfg.family == "vlm":
+        extra["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((B, nv, cfg.d_model)), jnp.float32)
+    if cfg.family == "audio":
+        frames = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+        full = m.forward_train(params, tokens=toks, frames=frames)
+        logits, caches = m.prefill(params, toks[:, :Spre], frames, caches)
+    else:
+        full = m.forward_train(params, tokens=toks, **extra)
+        logits, caches = m.prefill(params, toks[:, :Spre], caches, **extra)
+    full = full[:, nv:]
+    errs = [float(jnp.abs(full[:, Spre - 1:Spre] - logits).max())]
+    for i in range(Spre, S):
+        ln = jnp.full((B,), nv + i, jnp.int32)
+        logits, caches = m.decode_step(params, toks[:, i:i + 1], caches, ln)
+        errs.append(float(jnp.abs(full[:, i:i + 1] - logits).max()))
+    assert max(errs) < 2e-2, (arch, errs)
+
+
+def test_full_config_param_counts():
+    """The assigned configs hit their published total-parameter scale."""
+    expect = {
+        "jamba_1_5_large_398b": (380e9, 420e9),
+        "qwen1_5_110b": (100e9, 120e9),
+        "deepseek_v2_236b": (220e9, 250e9),
+        "phi3_5_moe_42b": (39e9, 45e9),
+        "mamba2_370m": (0.3e9, 0.5e9),
+        "granite_8b": (7e9, 9e9),
+        "mistral_nemo_12b": (11e9, 14e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        m = api(cfg)
+        shapes = jax.eval_shape(m.init_params, jax.random.key(0))
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                assert shape == "long_500k" and cfg.family not in (
+                    "ssm", "hybrid")
+                continue
+            kind, specs = input_specs(cfg, shape)
+            assert kind in ("train", "prefill", "decode")
+            assert all(
+                hasattr(leaf, "shape") for leaf in jax.tree.leaves(specs))
+
+
+# ---------------------------------------------------------- layer oracles ---
+
+_cfg = dict(num_layers=2, d_ff=128, vocab_size=256,
+            dtype="float32", param_dtype="float32")
+
+
+def test_ssd_chunked_vs_ref():
+    cfg = ModelConfig(name="t", family="ssm", d_model=64, num_heads=4,
+                      num_kv_heads=2, head_dim=16, ssm_state=16,
+                      ssm_head_dim=8, ssm_chunk=8, **_cfg)
+    p = m2.init_mamba2(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 37, 64), jnp.float32)
+    z, xin, b_, c_, dt, _ = m2._pre_ssd(p, cfg, x)
+    y_c, _ = m2.ssd_chunked(cfg, xin, b_, c_, dt, p["a_log"], p["d_skip"])
+    y_r = m2.ssd_ref(cfg, xin, b_, c_, dt, p["a_log"], p["d_skip"])
+    assert float(jnp.abs(y_c - y_r).max()) < 1e-4
+    # vectorized (dry-run probe) path agrees too
+    cfg_v = dataclasses.replace(cfg, ssd_vectorized=True)
+    y_v, _ = m2.ssd_chunked(cfg_v, xin, b_, c_, dt, p["a_log"], p["d_skip"])
+    assert float(jnp.abs(y_v - y_r).max()) < 1e-4
+
+
+def test_moe_dispatch_vs_dense_ref():
+    cfg = ModelConfig(name="t", family="moe", d_model=32, num_heads=4,
+                      num_kv_heads=4, head_dim=8, moe_experts=8, moe_top_k=2,
+                      moe_shared=1, moe_d_ff=48, capacity_factor=8.0, **_cfg)
+    p = init_moe(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 32), jnp.float32)
+    err = float(jnp.abs(moe_apply(p, cfg, x) - moe_ref(p, cfg, x)).max())
+    assert err < 1e-4
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity factor 1.0, outputs differ from dense ref only on
+    dropped tokens, and never NaN."""
+    cfg = ModelConfig(name="t", family="moe", d_model=32, num_heads=4,
+                      num_kv_heads=4, head_dim=8, moe_experts=4, moe_top_k=2,
+                      moe_shared=0, moe_d_ff=48, capacity_factor=1.0, **_cfg)
+    p = init_moe(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32), jnp.float32)
+    out = moe_apply(p, cfg, x)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("block_skip", [True, False])
+def test_flash_vs_naive(block_skip):
+    cfg = ModelConfig(name="t", family="dense", d_model=64, num_heads=8,
+                      num_kv_heads=2, head_dim=16, attn_chunk=16,
+                      qkv_bias=True, **_cfg)
+    p = init_attention(jax.random.PRNGKey(4), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 64, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    q, k, v = qkv_proj(p, cfg, x, pos)
+    on = attention_naive(q, k, v, True)
+    of = flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                         block_skip=block_skip)
+    assert float(jnp.abs(on - of).max()) < 1e-4
+
+
+def test_mla_decode_matches_train():
+    cfg = ModelConfig(name="t", family="dense", d_model=64, num_heads=4,
+                      num_kv_heads=4, head_dim=16, mla=True, q_lora_rank=32,
+                      kv_lora_rank=24, qk_nope_dim=16, qk_rope_dim=8,
+                      v_head_dim=16, **_cfg)
+    p = init_mla(jax.random.PRNGKey(6), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 16, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    y_t = mla_train(p, cfg, x, pos)
+    y_p, ckv, kr = mla_prefill(p, cfg, x[:, :12], pos[:, :12])
+    ckv_c = jnp.zeros((2, 16, 24)).at[:, :12].set(ckv)
+    kr_c = jnp.zeros((2, 16, 8)).at[:, :12].set(kr)
+    ys = [y_p]
+    for i in range(12, 16):
+        ln = jnp.full((2,), i, jnp.int32)
+        yy, ckv_c, kr_c = mla_decode(p, cfg, x[:, i:i + 1], pos[:, i:i + 1],
+                                     ckv_c, kr_c, ln)
+        ys.append(yy)
+    err = float(jnp.abs(y_t - jnp.concatenate(ys, 1)).max())
+    assert err < 1e-3

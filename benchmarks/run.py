@@ -28,15 +28,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="fig11|fig12|table1|ub_sweep|serve")
+                    help="fig11|fig12|table1|ub_sweep|serve|forest")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
     from benchmarks import fig11_small_tree, fig12_big_tree, table1_transfers
-    from benchmarks import ub_sweep
+    from benchmarks import forest_scale, ub_sweep
 
     todo = args.only.split(",") if args.only else [
-        "table1", "ub_sweep", "fig11", "fig12", "serve"]
+        "table1", "ub_sweep", "fig11", "fig12", "serve", "forest"]
     if "table1" in todo:
         table1_transfers.main(quick=quick)
     if "ub_sweep" in todo:
@@ -47,6 +47,8 @@ def main() -> None:
         fig12_big_tree.main(quick=quick)
     if "serve" in todo:
         _in_x64_subprocess("benchmarks.serve_paged", quick)
+    if "forest" in todo:
+        forest_scale.main(quick=quick)
 
 
 if __name__ == '__main__':

@@ -22,9 +22,12 @@ from repro.core.deltatree import (
     empty,
     live_keys,
     search_batch,
+    search_one,
     successor_jit,
+    successor_one,
     search_jit,
     update_batch,
+    update_batch_impl,
 )
 
 __all__ = [
@@ -35,12 +38,15 @@ __all__ = [
     "bulk_build",
     "live_keys",
     "search_batch",
+    "search_one",
     "successor_jit",
+    "successor_one",
     "lookup_batch",
     "lookup_jit",
     "live_items",
     "search_jit",
     "update_batch",
+    "update_batch_impl",
     "OP_SEARCH",
     "OP_INSERT",
     "OP_DELETE",

@@ -33,7 +33,8 @@ stay correct).  Equality tests compare ``key_of`` only.  With
 ``payload_bits == 0`` everything is int32 and byte-identical to the paper's
 set semantics.
 
-Occupancy invariants (checked by tests/test_deltatree_invariants.py):
+Occupancy invariants (checked by ``check_invariants`` in
+tests/test_deltatree.py):
   I1. value==EMPTY ⇔ slot unoccupied; internal node ⇔ left child occupied.
   I2. an occupied odd position implies its even sibling is occupied.
   I3. child links only at bottom positions whose value is non-EMPTY
@@ -804,16 +805,17 @@ def _parallel_fastpath(cfg: TreeConfig, t: DeltaTree, kinds, keys, payloads,
     return t, results, pending
 
 
-@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
-def update_batch(cfg: TreeConfig, t: DeltaTree, kinds: jax.Array,
-                 keys: jax.Array, payloads: jax.Array | None = None):
-    # the input tree is DONATED: .at[] updates run in place (callers must
-    # rebind `t = update_batch(...)[0]`, as all call sites do)
+def update_batch_impl(cfg: TreeConfig, t: DeltaTree, kinds: jax.Array,
+                      keys: jax.Array, payloads: jax.Array | None = None):
     """Apply a batch of update ops (insert/delete) in batch order, then run
     maintenance to fixpoint.  Returns (tree, results[K] bool, rounds).
 
     Searches are NOT taken here — use `search_batch` on the snapshot (they
     are wait-free and independent of update ordering within the step).
+
+    This is the untraced body; call sites use the jitted/donating
+    ``update_batch`` wrapper below, while the forest dispatcher
+    (repro/distributed) vmaps this impl per shard under shard_map.
     """
     k = keys.shape[0]
     if payloads is None:
@@ -917,6 +919,12 @@ def update_batch(cfg: TreeConfig, t: DeltaTree, kinds: jax.Array,
         round_cond, round_body, (t, results, pending, jnp.int32(0))
     )
     return t, results, rounds
+
+
+# the input tree is DONATED: .at[] updates run in place (callers must
+# rebind `t = update_batch(...)[0]`, as all call sites do)
+update_batch = functools.partial(
+    jax.jit, static_argnums=0, donate_argnums=1)(update_batch_impl)
 
 
 @functools.partial(jax.jit, static_argnums=0)

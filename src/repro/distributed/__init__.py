@@ -1,0 +1,41 @@
+"""DeltaForest — key-range-sharded ΔTree subsystem (DESIGN.md §4).
+
+Public API (drop-in superset of `repro.core`):
+    ForestConfig, Forest, empty, bulk_build,
+    search_batch, lookup_batch, update_batch, successor_jit,
+    live_keys, live_items, alloc_failed, shard_tree,
+    splits (partitioner), router (batched cross-shard routing).
+"""
+
+from repro.distributed import router, splits
+from repro.distributed.forest import (
+    Forest,
+    ForestConfig,
+    alloc_failed,
+    bulk_build,
+    empty,
+    live_items,
+    live_keys,
+    lookup_batch,
+    search_batch,
+    shard_tree,
+    successor_jit,
+    update_batch,
+)
+
+__all__ = [
+    "Forest",
+    "ForestConfig",
+    "alloc_failed",
+    "bulk_build",
+    "empty",
+    "live_items",
+    "live_keys",
+    "lookup_batch",
+    "router",
+    "search_batch",
+    "shard_tree",
+    "splits",
+    "successor_jit",
+    "update_batch",
+]

@@ -1,0 +1,250 @@
+"""DeltaForest — S independent ΔTree arenas partitioned by key range.
+
+The forest is the scale-out layer over `repro.core` (DESIGN.md §4): each
+shard is a full ΔTree arena owning a contiguous key range, stacked into one
+pytree with a leading (S,) axis and driven through ``jax.shard_map`` over
+the "shards" mesh (`repro.launch.mesh.make_forest_mesh`).  The public API
+is a drop-in superset of `repro.core`:
+
+    ForestConfig, Forest, empty, bulk_build,
+    search_batch, lookup_batch, update_batch, successor_jit,
+    live_keys, live_items
+
+Semantics are *identical* to a single tree: the router's stable bucket
+sort preserves batch order within each shard, and ops on one key always
+route to the same shard, so per-shard batch-order application is a valid
+linearization of the whole batch.  Searches stay wait-free (pre-step
+snapshot per shard).  Maintenance (Rebalance / Expand / Merge) runs
+entirely shard-local — the paper's locality argument is what makes the
+partition free of cross-shard traffic outside the router's permutation.
+
+Cross-shard coordination exists in exactly one read-only place: a
+successor query whose owner shard has no key above it falls through to the
+first later non-empty shard's minimum.  The per-shard minima are computed
+inside the same dispatch (one extra wait-free successor probe per shard)
+and combined with a suffix-min outside the shard_map — no second hop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DeltaTree,
+    TreeConfig,
+    layout,
+)
+from repro.core import deltatree as DT
+from repro.distributed import router as R
+from repro.distributed import splits as SP
+
+OP_SEARCH, OP_INSERT, OP_DELETE = DT.OP_SEARCH, DT.OP_INSERT, DT.OP_DELETE
+
+_NO_SUCC = jnp.int32(2**31 - 1)  # suffix-min identity for absent shard minima
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestConfig:
+    """Static forest parameters (hashable; closed over by jitted fns).
+
+    num_shards: S — number of independent ΔTree arenas.
+    tree:       per-shard TreeConfig (arena size is *per shard*).
+    key_min/max: key domain used for fallback equi-width boundaries.
+    """
+
+    num_shards: int = 4
+    tree: TreeConfig = TreeConfig()
+    key_min: int = layout.KEY_MIN
+    key_max: int = layout.KEY_MAX
+
+
+class Forest(NamedTuple):
+    """Stacked-arena pytree: every DeltaTree leaf gains a leading (S,) axis;
+    ``splits`` is the (S-1,) boundary array the router searchsorts."""
+
+    trees: DeltaTree
+    splits: jax.Array
+
+
+def _stack(trees: list[DeltaTree]) -> DeltaTree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def shard_tree(forest: Forest, s: int) -> DeltaTree:
+    """Host-side view of one shard's arena (tests / debug)."""
+    return jax.tree.map(lambda x: x[s], forest.trees)
+
+
+def _as_splits(fcfg: ForestConfig, splits) -> jax.Array:
+    if splits is None:
+        splits = SP.equiwidth_splits(fcfg.num_shards, fcfg.key_min,
+                                     fcfg.key_max)
+    splits = np.asarray(splits, np.int64)
+    assert splits.shape == (fcfg.num_shards - 1,), splits.shape
+    return jnp.asarray(splits.astype(np.int32))
+
+
+# --------------------------------------------------------------------------
+# construction
+# --------------------------------------------------------------------------
+
+
+def empty(fcfg: ForestConfig, splits=None) -> Forest:
+    trees = _stack([DT.empty(fcfg.tree) for _ in range(fcfg.num_shards)])
+    return Forest(trees=trees, splits=_as_splits(fcfg, splits))
+
+
+def bulk_build(fcfg: ForestConfig, values: np.ndarray,
+               payloads: np.ndarray | None = None, splits=None) -> Forest:
+    """Build a forest from unique keys (host-side, like core bulk_build).
+
+    With no explicit ``splits`` the boundaries are equi-depth over
+    ``values`` — every shard starts with |values|/S keys regardless of the
+    key distribution (the interpolation-tree property)."""
+    values = np.asarray(values, np.int64)
+    order = np.argsort(values)
+    values = values[order]
+    if payloads is not None:
+        payloads = np.asarray(payloads, np.int64)[order]
+    if splits is None:
+        splits = SP.equidepth_splits(values, fcfg.num_shards,
+                                     fcfg.key_min, fcfg.key_max)
+    splits = np.asarray(splits, np.int64)
+    sid = SP.shard_of_np(splits, values)
+    trees = []
+    for s in range(fcfg.num_shards):
+        mask = sid == s
+        trees.append(DT.bulk_build(
+            fcfg.tree, values[mask],
+            payloads[mask] if payloads is not None else None))
+    return Forest(trees=_stack(trees), splits=_as_splits(fcfg, splits))
+
+
+# --------------------------------------------------------------------------
+# wait-free reads
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def search_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
+    """Routed wait-free search. Returns (found[K], hops[K])."""
+    keys = keys.astype(jnp.int32)
+    r = R.route(f.splits, keys)
+    dkeys = R.scatter_dense(r, fcfg.num_shards, keys, jnp.int32(0))
+
+    def per_shard(t, ks):
+        return DT.search_batch(fcfg.tree, t, ks)
+
+    found, hops = R.dispatch(fcfg.num_shards, per_shard, f.trees, dkeys)
+    return R.gather_batch(r, found), R.gather_batch(r, hops)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def lookup_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
+    """Routed map-mode lookup. Returns (found[K], payload[K], hops[K])."""
+    keys = keys.astype(jnp.int32)
+    r = R.route(f.splits, keys)
+    dkeys = R.scatter_dense(r, fcfg.num_shards, keys, jnp.int32(0))
+
+    def per_shard(t, ks):
+        return DT.lookup_batch(fcfg.tree, t, ks)
+
+    found, pay, hops = R.dispatch(fcfg.num_shards, per_shard, f.trees, dkeys)
+    return (R.gather_batch(r, found), R.gather_batch(r, pay),
+            R.gather_batch(r, hops))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def successor_jit(fcfg: ForestConfig, f: Forest, keys: jax.Array):
+    """Routed wait-free successor. Returns (found[K], succ[K]).
+
+    Owner-shard miss falls through to the first later non-empty shard's
+    minimum (computed in the same dispatch; combined with a suffix-min)."""
+    keys = keys.astype(jnp.int32)
+    r = R.route(f.splits, keys)
+    dkeys = R.scatter_dense(r, fcfg.num_shards, keys, jnp.int32(0))
+
+    def per_shard(t, ks):
+        found, succ = jax.vmap(
+            lambda k: DT.successor_one(fcfg.tree, t, k))(ks)
+        # shard minimum = successor of (KEY_MIN - 1) — one extra probe
+        has_min, mn = DT.successor_one(
+            fcfg.tree, t, jnp.int32(layout.KEY_MIN - 1))
+        return found, succ, has_min, mn
+
+    found, succ, has_min, mins = R.dispatch(
+        fcfg.num_shards, per_shard, f.trees, dkeys)
+    # first non-empty shard strictly after each owner shard (suffix min over
+    # shard minima works because shards are key-ordered)
+    masked = jnp.where(has_min, mins, _NO_SUCC)
+    suffix = jax.lax.associative_scan(jnp.minimum, masked, reverse=True)
+    after = jnp.concatenate([suffix[1:], jnp.full((1,), _NO_SUCC)])
+    f_owner = R.gather_batch(r, found)
+    s_owner = R.gather_batch(r, succ)
+    sid = r.sid
+    fallback = after[sid]
+    out_found = f_owner | (fallback < _NO_SUCC)
+    out_succ = jnp.where(f_owner, s_owner,
+                         jnp.where(fallback < _NO_SUCC, fallback, 0))
+    return out_found, out_succ
+
+
+# --------------------------------------------------------------------------
+# batched updates
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+def update_batch(fcfg: ForestConfig, f: Forest, kinds: jax.Array,
+                 keys: jax.Array, payloads: jax.Array | None = None):
+    """Routed batch-order updates; per-shard maintenance to fixpoint.
+
+    Returns (forest, results[K] bool, rounds) with ``rounds`` the max over
+    shards — identical contract to ``repro.core.update_batch``."""
+    keys = keys.astype(jnp.int32)
+    k = keys.shape[0]
+    if payloads is None:
+        payloads = jnp.zeros((k,), jnp.int32)
+    payloads = payloads.astype(jnp.int32)
+    r = R.route(f.splits, keys)
+    s = fcfg.num_shards
+    dkinds = R.scatter_dense(r, s, kinds.astype(jnp.int32),
+                             jnp.int32(OP_SEARCH))  # pads are no-ops
+    dkeys = R.scatter_dense(r, s, keys, jnp.int32(0))
+    dpays = R.scatter_dense(r, s, payloads, jnp.int32(0))
+
+    def per_shard(t, kn, ks, ps):
+        return DT.update_batch_impl(fcfg.tree, t, kn, ks, ps)
+
+    trees, dres, rounds = R.dispatch(s, per_shard, f.trees, dkinds, dkeys,
+                                     dpays, sequential=True)
+    return (Forest(trees=trees, splits=f.splits),
+            R.gather_batch(r, dres), jnp.max(rounds))
+
+
+# --------------------------------------------------------------------------
+# host-side debug / verification (mirror repro.core)
+# --------------------------------------------------------------------------
+
+
+def live_items(fcfg: ForestConfig, f: Forest):
+    """All live (key, payload) pairs, key-sorted (shard order == key order)."""
+    out = []
+    for s in range(fcfg.num_shards):
+        out.extend(DT.live_items(fcfg.tree, shard_tree(f, s)))
+    return out
+
+
+def live_keys(fcfg: ForestConfig, f: Forest) -> np.ndarray:
+    return np.asarray([k for k, _ in live_items(fcfg, f)], dtype=np.int64)
+
+
+def alloc_failed(f: Forest) -> bool:
+    """True if any shard's arena ever exhausted (sticky, like core)."""
+    return bool(np.asarray(f.trees.alloc_fail).any())

@@ -1,0 +1,108 @@
+"""Batched cross-shard routing for the DeltaForest (DESIGN.md §4).
+
+A mixed query/update batch arrives in *linearization order*.  The router
+
+  1. assigns every op its owner shard with one ``searchsorted`` against the
+     (S-1,) boundary array,
+  2. bucket-sorts the batch by shard with a single stable argsort (stability
+     preserves batch order *within* each shard, which is exactly what the
+     per-shard linearization needs — ops on the same key always land in the
+     same shard, so batch-order semantics are preserved end to end),
+  3. computes segment offsets of the sorted shard ids (a second
+     searchsorted) and scatters each op into a dense (S, K) per-shard lane,
+     padded with no-op rows (OP_SEARCH / key 0),
+  4. dispatches the per-shard kernels under ``shard_map`` over the
+     "shards" mesh (leftover shards-per-device vmapped inside the body),
+  5. inverse-permutes the (S, K) per-shard results back to batch order.
+
+Everything on the hot path is shape-static and jittable: no Python loop
+touches an op, and the only per-shard state a device reads is its own arena
+slice — the forest's realization of the paper's "maintenance stays local".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import make_forest_mesh
+
+
+class Routing(NamedTuple):
+    """Static-shape routing plan for one batch (all (K,) int32)."""
+
+    sid: jax.Array         # owner shard per op, batch order
+    order: jax.Array       # stable permutation sorting ops by shard
+    sid_sorted: jax.Array  # sid[order]
+    local: jax.Array       # lane within the owner shard's dense row
+
+
+def route(splits: jax.Array, keys: jax.Array) -> Routing:
+    """Build the bucket-sort plan: searchsorted + segment offsets."""
+    k = keys.shape[0]
+    num_shards = splits.shape[0] + 1
+    sid = jnp.searchsorted(
+        splits, keys.astype(splits.dtype), side="right"
+    ).astype(jnp.int32)
+    order = jnp.argsort(sid, stable=True)
+    sid_sorted = sid[order]
+    # offsets[s] = first sorted index owned by shard s (segment offsets)
+    offsets = jnp.searchsorted(
+        sid_sorted, jnp.arange(num_shards, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    local = jnp.arange(k, dtype=jnp.int32) - offsets[sid_sorted]
+    return Routing(sid, order, sid_sorted, local)
+
+
+def scatter_dense(r: Routing, num_shards: int, x: jax.Array, fill) -> jax.Array:
+    """Batch-order (K,) -> dense per-shard (S, K), padded with ``fill``."""
+    k = x.shape[0]
+    dense = jnp.full((num_shards, k), fill, x.dtype)
+    return dense.at[r.sid_sorted, r.local].set(x[r.order])
+
+
+def gather_batch(r: Routing, dense: jax.Array) -> jax.Array:
+    """Inverse permute dense per-shard (S, K, ...) results to batch order."""
+    k = r.order.shape[0]
+    picked = dense[r.sid_sorted, r.local]
+    out = jnp.zeros((k,) + dense.shape[2:], dense.dtype)
+    return out.at[r.order].set(picked)
+
+
+@functools.lru_cache(maxsize=None)
+def forest_mesh(num_shards: int):
+    return make_forest_mesh(num_shards)
+
+
+def dispatch(num_shards: int, fn, trees, *dense_args, sequential=False):
+    """Run ``fn(tree, *args)`` once per shard under shard_map.
+
+    ``trees`` is the stacked (S, ...) arena pytree; every ``dense_args``
+    leaf carries a leading S axis.  The mesh splits the S axis across
+    devices; shards co-resident on one device run under vmap (reads) or
+    ``lax.map`` (``sequential=True`` — the update path: vmapping
+    `update_batch_impl` would lower its lax.cond/switch branches to
+    execute-all-branches selects, a ~100x slowdown, whereas lax.map keeps
+    them real XLA conditionals; cross-*device* shards still run in
+    parallel under the shard_map).  Outputs may be any pytree whose
+    leaves carry the leading S axis.
+    """
+    mesh = forest_mesh(num_shards)
+
+    def body(trees_loc, *args_loc):
+        if sequential:
+            return jax.lax.map(lambda a: fn(*a), (trees_loc,) + args_loc)
+        return jax.vmap(fn)(trees_loc, *args_loc)
+
+    nargs = 1 + len(dense_args)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P("shards"),) * nargs,
+        out_specs=P("shards"),
+        check_rep=False,
+    )(trees, *dense_args)

@@ -1,0 +1,120 @@
+"""Key-range partitioner for the DeltaForest (DESIGN.md §4).
+
+Shard boundaries follow the *observed* key distribution, interpolation-tree
+style (Prokopec et al., 2020): given a key sample, ``equidepth_splits``
+places the S-1 boundaries at equi-depth quantiles so every shard owns the
+same number of sampled keys.  Shard ownership is
+
+    shard(k) = #{ j : splits[j] <= k }       (jnp.searchsorted side="right")
+
+i.e. shard 0 owns keys below ``splits[0]`` and shard j owns
+``[splits[j-1], splits[j])`` — ``splits[j]`` is the smallest key of shard
+j+1.  Boundaries are strictly increasing; degenerate samples fall back to
+equi-width boundaries over the key domain.
+
+The partition is a control-plane decision: it is chosen host-side (numpy),
+then baked into the forest as a tiny (S-1,) device array that the jitted
+router searchsorts against.  ``rebalance`` is the slow-path entry point
+that re-derives boundaries from the *live* key set and rebuilds the forest
+when growth has skewed the shards.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import layout
+
+
+def equiwidth_splits(num_shards: int, key_min: int = layout.KEY_MIN,
+                     key_max: int = layout.KEY_MAX) -> np.ndarray:
+    """Uniform boundaries over [key_min, key_max] (no-sample fallback)."""
+    assert num_shards >= 1
+    span = int(key_max) - int(key_min) + 1
+    bnd = key_min + (np.arange(1, num_shards, dtype=np.int64) * span) // num_shards
+    return bnd.astype(np.int64)
+
+
+def equidepth_splits(sample: np.ndarray, num_shards: int,
+                     key_min: int = layout.KEY_MIN,
+                     key_max: int = layout.KEY_MAX) -> np.ndarray:
+    """Equi-depth boundaries from a key sample.
+
+    Returns (num_shards - 1,) strictly increasing boundaries.  Quantile
+    positions that collide (tiny or highly skewed samples) are repaired
+    from the equi-width grid so the router always sees a valid partition.
+    """
+    assert num_shards >= 1
+    if num_shards == 1:
+        return np.zeros((0,), np.int64)
+    sample = np.sort(np.asarray(sample, np.int64).ravel())
+    fallback = equiwidth_splits(num_shards, key_min, key_max)
+    if sample.size == 0:
+        return fallback
+    # boundary j = smallest key of shard j+1 -> the (j+1)*n/S-th sample
+    idx = ((np.arange(1, num_shards, dtype=np.int64) * sample.size)
+           // num_shards)
+    bnd = sample[np.clip(idx, 0, sample.size - 1)]
+    # enforce strict monotonicity inside (key_min, key_max]
+    out = np.empty(num_shards - 1, np.int64)
+    prev = int(key_min)
+    for j in range(num_shards - 1):
+        b = int(max(bnd[j], prev + 1))
+        b = min(b, int(key_max))
+        out[j] = b
+        prev = b
+    # if we saturated at key_max, spread the tail from the equi-width grid
+    for j in range(num_shards - 2, -1, -1):
+        hi = int(key_max) - (num_shards - 2 - j)
+        if out[j] > hi:
+            out[j] = hi
+    if (np.diff(out) <= 0).any():
+        return fallback
+    return out
+
+
+def shard_of_np(splits: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Host-side shard ownership (mirrors the jitted router)."""
+    return np.searchsorted(np.asarray(splits, np.int64),
+                           np.asarray(keys, np.int64), side="right")
+
+
+def shard_counts(fcfg, forest) -> np.ndarray:
+    """Live keys per shard (host-side).  Buffers are empty post-step
+    (invariant I5), so per-arena ``nlive`` over alive ΔNodes is exact."""
+    nlive = np.asarray(forest.trees.nlive)
+    alive = np.asarray(forest.trees.alive)
+    return (nlive * alive).sum(axis=1).astype(np.int64)
+
+
+def needs_rebalance(fcfg, forest, *, skew: float = 2.0) -> bool:
+    """True when the fullest shard holds > ``skew`` times its fair share.
+
+    The worst case with S shards is S times the mean, so the effective
+    threshold is clamped to (S+1)/2 — strictly below S — ensuring maximal
+    skew always trips regardless of shard count (S=2 included)."""
+    counts = shard_counts(fcfg, forest)
+    total = counts.sum()
+    if total == 0 or len(counts) <= 1:
+        return False
+    eff = min(skew, (len(counts) + 1) / 2)
+    return bool(counts.max() > eff * (total / len(counts)))
+
+
+def rebalance(fcfg, forest):
+    """Re-partition the forest equi-depth over its *live* keys and rebuild.
+
+    Slow path by design (host-side gather + bulk_build): the paper's
+    maintenance stays shard-local; this is the forest-level analogue of a
+    Rebalance sweep, invoked rarely by the driver when ``needs_rebalance``
+    trips.  Returns a new Forest; the old one remains valid (functional).
+    """
+    from repro.distributed import forest as F
+
+    items = F.live_items(fcfg, forest)
+    keys = np.asarray([k for k, _ in items], np.int64)
+    pays = np.asarray([p for _, p in items], np.int64)
+    new_splits = equidepth_splits(keys, fcfg.num_shards,
+                                  fcfg.key_min, fcfg.key_max)
+    return F.bulk_build(fcfg, keys, pays if fcfg.tree.payload_bits else None,
+                        splits=new_splits)

@@ -7,6 +7,7 @@ touches jax device state.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,6 +19,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over host devices (tests / examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_forest_mesh(num_shards: int):
+    """1-D "shards" mesh for the DeltaForest (repro/distributed).
+
+    Uses the largest divisor of ``num_shards`` that fits the available
+    device count, so the stacked (S, ...) forest arenas always split
+    evenly; leftover shards-per-device are vmapped inside the shard_map
+    body.  On a single device this degenerates to a size-1 mesh (pure
+    vmap), which keeps the forest runnable in unit tests without
+    --xla_force_host_platform_device_count.
+    """
+    nd = jax.device_count()
+    use = max(d for d in range(1, min(nd, num_shards) + 1)
+              if num_shards % d == 0)
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:use]), ("shards",))
 
 
 # TPU v5e hardware constants (assignment §Roofline)

@@ -1,2 +1,10 @@
 """Distribution layer: logical-axis sharding rules, param shardings,
-sharded decode attention (split-K), collective helpers."""
+sharded decode attention (split-K), collective helpers.
+
+The DeltaForest (repro/distributed) rides this layer too: its 1-D
+"shards" mesh is re-exported here so mesh plumbing has one import home.
+"""
+
+from repro.launch.mesh import make_forest_mesh, make_host_mesh
+
+__all__ = ["make_forest_mesh", "make_host_mesh"]

@@ -1,4 +1,11 @@
 from repro.serving.pager import DeltaPager, PagerConfig
 from repro.serving.engine import ServeEngine
+from repro.serving.sharded_pager import ShardedDeltaPager, ShardedPagerConfig
 
-__all__ = ["DeltaPager", "PagerConfig", "ServeEngine"]
+__all__ = [
+    "DeltaPager",
+    "PagerConfig",
+    "ServeEngine",
+    "ShardedDeltaPager",
+    "ShardedPagerConfig",
+]

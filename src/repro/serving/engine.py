@@ -32,6 +32,7 @@ from repro.models.layers.basic import (
 from repro.models.layers.moe import moe_apply
 from repro.kernels.delta_paged_attention import paged_decode_attention
 from repro.serving.pager import DeltaPager, PagerConfig
+from repro.serving.sharded_pager import ShardedDeltaPager, ShardedPagerConfig
 
 
 @dataclasses.dataclass
@@ -50,7 +51,11 @@ class ServeEngine:
         assert not cfg.mla, "engine supports GQA caches"
         self.cfg = cfg
         self.params = params
-        self.pager = DeltaPager(pager_cfg)
+        # a ShardedPagerConfig fans the block-table index out over a
+        # DeltaForest (one ΔTree arena per key-range shard)
+        self.pager = (ShardedDeltaPager(pager_cfg)
+                      if isinstance(pager_cfg, ShardedPagerConfig)
+                      else DeltaPager(pager_cfg))
         self.ps = pager_cfg.page_size
         self.max_batch = max_batch
         L, NP = cfg.num_layers, pager_cfg.num_pages

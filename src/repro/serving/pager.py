@@ -54,20 +54,42 @@ class PagerConfig:
 
 
 class DeltaPager:
-    """Host-driven pager; tree ops are jitted batched ΔTree steps."""
+    """Host-driven pager; tree ops are jitted batched ΔTree steps.
+
+    The index is pluggable through four hooks (`_make_index`, `_key`,
+    `_lookup`, `_update`) — `ShardedDeltaPager` overrides them to swap the
+    single arena for a DeltaForest without touching the pager protocol.
+    """
 
     def __init__(self, cfg: PagerConfig):
         self.cfg = cfg
-        self.tcfg = cfg.tree_config
-        self.tree = empty(self.tcfg)
+        self._make_index()
         self.free_pages = list(range(cfg.num_pages - 1, -1, -1))
         self.seq_blocks: dict[int, int] = {}   # seq -> allocated blocks
         self.stats = {"searches": 0, "inserts": 0, "deletes": 0, "hops": 0}
 
-    # ---- key encoding ----
+    # ---- index hooks (overridden by ShardedDeltaPager) ----
+    def _make_index(self) -> None:
+        self.tcfg = self.cfg.tree_config
+        self.tree = empty(self.tcfg)
+
     def _key(self, seq_id, block) -> np.ndarray:
         return (np.asarray(seq_id, np.int64) * self.cfg.max_blocks
                 + np.asarray(block, np.int64) + 1).astype(np.int32)
+
+    def _lookup(self, keys: np.ndarray):
+        """(found, payload, hops) for a key batch (wait-free search)."""
+        return lookup_jit(self.tcfg, self.tree, jnp.asarray(keys))
+
+    def _update(self, kinds: np.ndarray, keys: np.ndarray,
+                payloads: np.ndarray):
+        """Apply a batched insert/delete step; returns per-op results."""
+        self.tree, res, _ = update_batch(
+            self.tcfg, self.tree, jnp.asarray(kinds), jnp.asarray(keys),
+            jnp.asarray(payloads),
+        )
+        assert not bool(self.tree.alloc_fail), "ΔTree arena exhausted"
+        return res
 
     # ---- mutations ----
     def allocate(self, seq_id: int, n_blocks: int) -> list[int]:
@@ -77,12 +99,8 @@ class DeltaPager:
         pages = [self.free_pages.pop() for _ in range(n_blocks)]
         keys = self._key(seq_id, np.arange(start, start + n_blocks))
         kinds = np.full(len(pages), OP_INSERT, np.int32)
-        self.tree, res, _ = update_batch(
-            self.tcfg, self.tree, jnp.asarray(kinds), jnp.asarray(keys),
-            jnp.asarray(np.asarray(pages, np.int32)),
-        )
+        res = self._update(kinds, keys, np.asarray(pages, np.int32))
         assert bool(np.asarray(res).all()), "duplicate block allocation"
-        assert not bool(self.tree.alloc_fail), "ΔTree arena exhausted"
         self.seq_blocks[seq_id] = start + n_blocks
         self.stats["inserts"] += n_blocks
         return pages
@@ -92,13 +110,10 @@ class DeltaPager:
         if n == 0:
             return
         keys = self._key(seq_id, np.arange(n))
-        found, pages, _ = lookup_jit(self.tcfg, self.tree, jnp.asarray(keys))
+        found, pages, _ = self._lookup(keys)
         assert bool(np.asarray(found).all())
         kinds = np.full(n, OP_DELETE, np.int32)
-        self.tree, res, _ = update_batch(
-            self.tcfg, self.tree, jnp.asarray(kinds), jnp.asarray(keys),
-            jnp.zeros(n, jnp.int32),
-        )
+        res = self._update(kinds, keys, np.zeros(n, np.int32))
         assert bool(np.asarray(res).all())
         self.free_pages.extend(int(p) for p in np.asarray(pages))
         self.stats["deletes"] += n
@@ -112,7 +127,7 @@ class DeltaPager:
             np.repeat(seq_ids, max_blocks),
             np.tile(np.arange(max_blocks), b),
         )
-        found, pages, hops = lookup_jit(self.tcfg, self.tree, jnp.asarray(keys))
+        found, pages, hops = self._lookup(keys)
         self.stats["searches"] += len(keys)
         self.stats["hops"] += int(np.asarray(hops).sum())
         table = np.where(np.asarray(found), np.asarray(pages), -1)

@@ -3,6 +3,9 @@ dictionary semantics), for both set and map modes and several UB sizes."""
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import TreeConfig, empty, live_keys, search_jit, update_batch

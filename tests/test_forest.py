@@ -1,0 +1,257 @@
+"""DeltaForest equivalence: routed sharded forest == single ΔTree / oracle.
+
+In-process tests run on the default single CPU device (the "shards" mesh
+degenerates to vmap); subprocess tests exercise real shard_map over 8 fake
+host devices and the x64 map-mode / sharded-pager paths.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import TreeConfig, live_keys as core_live_keys
+from repro.core import bulk_build as core_bulk_build
+from repro.core import empty as core_empty
+from repro.core import search_jit, successor_jit as core_successor
+from repro.core import update_batch as core_update
+from repro.core.oracle import SetOracle
+import repro.distributed as D
+from repro.distributed import splits as SP
+from tests._subproc import run_py
+
+
+def _mixed_batch(rng, k, key_hi):
+    kinds = rng.integers(1, 3, size=k).astype(np.int32)
+    keys = rng.integers(1, key_hi, size=k).astype(np.int32)
+    return kinds, keys
+
+
+# ---------------------------------------------------------------- router ---
+
+
+def test_router_roundtrip():
+    from repro.distributed import router as R
+
+    rng = np.random.default_rng(0)
+    splits = jnp.asarray([50, 100, 150], jnp.int32)
+    keys = jnp.asarray(rng.integers(1, 200, size=64), jnp.int32)
+    r = R.route(splits, keys)
+    # ownership matches the host-side partitioner
+    np.testing.assert_array_equal(
+        np.asarray(r.sid), SP.shard_of_np(np.asarray(splits), np.asarray(keys)))
+    # scatter/gather is an exact inverse (padding never leaks through)
+    dense = R.scatter_dense(r, 4, keys, jnp.int32(0))
+    back = R.gather_batch(r, dense)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(keys))
+    # each dense row only holds its own shard's keys (or padding)
+    dense_np = np.asarray(dense)
+    for s in range(4):
+        row = dense_np[s][dense_np[s] != 0]
+        assert (SP.shard_of_np(np.asarray(splits), row) == s).all()
+
+
+def test_equidepth_splits_balance():
+    rng = np.random.default_rng(1)
+    # heavily skewed sample: uniform boundaries would starve 3 of 4 shards
+    sample = np.concatenate([
+        rng.integers(1, 100, size=900),
+        rng.integers(1_000_000, 2_000_000, size=100),
+    ])
+    bnd = SP.equidepth_splits(sample, 4)
+    assert bnd.shape == (3,) and (np.diff(bnd) > 0).all()
+    counts = np.bincount(SP.shard_of_np(bnd, sample), minlength=4)
+    assert counts.min() >= 0.15 * sample.size, counts
+    # degenerate sample falls back to a valid equi-width partition
+    bnd2 = SP.equidepth_splits(np.full(50, 7), 4, key_min=1, key_max=1000)
+    assert bnd2.shape == (3,) and (np.diff(bnd2) > 0).all()
+
+
+# --------------------------------------------- 1-shard == repro.core ------
+
+
+def test_one_shard_forest_matches_core():
+    tcfg = TreeConfig(height=4, max_dnodes=512, buf_cap=8)
+    fcfg = D.ForestConfig(num_shards=1, tree=tcfg, key_max=200)
+    f = D.empty(fcfg)
+    t = core_empty(tcfg)
+    rng = np.random.default_rng(2)
+    for step in range(6):
+        kinds, keys = _mixed_batch(rng, 20, 150)
+        ff, fh = D.search_batch(fcfg, f, jnp.asarray(keys))
+        tf, th = search_jit(tcfg, t, jnp.asarray(keys))
+        np.testing.assert_array_equal(np.asarray(ff), np.asarray(tf))
+        np.testing.assert_array_equal(np.asarray(fh), np.asarray(th))
+        f, fres, _ = D.update_batch(fcfg, f, jnp.asarray(kinds),
+                                    jnp.asarray(keys))
+        t, tres, _ = core_update(tcfg, t, jnp.asarray(kinds),
+                                 jnp.asarray(keys))
+        np.testing.assert_array_equal(np.asarray(fres), np.asarray(tres))
+        np.testing.assert_array_equal(
+            D.live_keys(fcfg, f), core_live_keys(tcfg, t))
+    q = jnp.asarray(rng.integers(0, 160, size=40), jnp.int32)
+    sf, sv = D.successor_jit(fcfg, f, q)
+    cf, cv = core_successor(tcfg, t, q)
+    np.testing.assert_array_equal(np.asarray(sf), np.asarray(cf))
+    np.testing.assert_array_equal(np.asarray(sv), np.asarray(cv))
+
+
+# ------------------------------------------- S>1 == single-tree oracle ----
+
+
+def test_multishard_forest_matches_single_tree():
+    tcfg = TreeConfig(height=4, max_dnodes=256, buf_cap=8)
+    big = TreeConfig(height=4, max_dnodes=1024, buf_cap=8)
+    fcfg = D.ForestConfig(num_shards=4, tree=tcfg, key_max=400)
+    f = D.empty(fcfg)
+    t = core_empty(big)
+    oracle = SetOracle()
+    rng = np.random.default_rng(3)
+    for step in range(6):
+        kinds, keys = _mixed_batch(rng, 24, 300)
+        found, _ = D.search_batch(fcfg, f, jnp.asarray(keys))
+        assert (np.asarray(found) == oracle.snapshot_search(keys)).all()
+        f, fres, _ = D.update_batch(fcfg, f, jnp.asarray(kinds),
+                                    jnp.asarray(keys))
+        t, tres, _ = core_update(big, t, jnp.asarray(kinds),
+                                 jnp.asarray(keys))
+        exp = oracle.apply_updates(kinds, keys)
+        np.testing.assert_array_equal(np.asarray(fres), exp)
+        np.testing.assert_array_equal(np.asarray(fres), np.asarray(tres))
+        # bit-identical sorted live key set, forest vs single tree
+        np.testing.assert_array_equal(
+            D.live_keys(fcfg, f), core_live_keys(big, t))
+    assert not D.alloc_failed(f)
+    # cross-shard successor fall-through
+    live = oracle.keys()
+    q = rng.integers(0, 420, size=64).astype(np.int32)
+    sf, sv = D.successor_jit(fcfg, f, jnp.asarray(q))
+    idx = np.searchsorted(live, q, side="right")
+    ef = idx < live.size
+    es = np.where(ef, live[np.minimum(idx, live.size - 1)], 0)
+    np.testing.assert_array_equal(np.asarray(sf), ef)
+    np.testing.assert_array_equal(np.asarray(sv)[ef], es[ef])
+
+
+def test_bulk_build_equidepth_and_rebalance():
+    # arena sized so even the deliberately-skewed build (all keys in one
+    # shard) fits: 2000 keys / half_cap=8 -> ~250 leaf ΔNodes + interior
+    tcfg = TreeConfig(height=5, max_dnodes=512, buf_cap=8)
+    fcfg = D.ForestConfig(num_shards=4, tree=tcfg)
+    rng = np.random.default_rng(4)
+    vals = np.unique(rng.integers(1, 10_000, size=2000).astype(np.int32))
+    f = D.bulk_build(fcfg, vals)
+    np.testing.assert_array_equal(D.live_keys(fcfg, f), vals.astype(np.int64))
+    counts = SP.shard_counts(fcfg, f)
+    assert counts.sum() == vals.size
+    assert counts.max() <= 1.5 * counts.mean()  # equi-depth build balances
+    f2, hops = D.search_batch(fcfg, f, jnp.asarray(vals[:128]))
+    assert bool(np.asarray(f2).all())
+    # skewed forest -> rebalance restores balance and preserves the key set
+    skewed = D.bulk_build(fcfg, vals, splits=np.asarray([9990, 9994, 9997]))
+    assert SP.needs_rebalance(fcfg, skewed)
+    fixed = SP.rebalance(fcfg, skewed)
+    assert not SP.needs_rebalance(fcfg, fixed)
+    np.testing.assert_array_equal(D.live_keys(fcfg, fixed),
+                                  vals.astype(np.int64))
+
+
+# ------------------------------------------------ shard_map (8 devices) ---
+
+
+def test_forest_shard_map_8_devices():
+    out = run_py("""
+import jax, numpy as np, jax.numpy as jnp
+assert jax.device_count() == 8, jax.devices()
+from repro.core import TreeConfig
+from repro.core.oracle import SetOracle
+import repro.distributed as D
+from repro.distributed.router import forest_mesh
+
+fcfg = D.ForestConfig(num_shards=4,
+                      tree=TreeConfig(height=4, max_dnodes=256, buf_cap=8),
+                      key_max=300)
+assert forest_mesh(4).devices.size == 4   # real multi-device shard_map
+f = D.empty(fcfg)
+oracle = SetOracle()
+rng = np.random.default_rng(5)
+for step in range(5):
+    kinds = rng.integers(1, 3, size=16).astype(np.int32)
+    keys = rng.integers(1, 250, size=16).astype(np.int32)
+    found, _ = D.search_batch(fcfg, f, jnp.asarray(keys))
+    assert (np.asarray(found) == oracle.snapshot_search(keys)).all()
+    f, res, _ = D.update_batch(fcfg, f, jnp.asarray(kinds), jnp.asarray(keys))
+    assert (np.asarray(res) == oracle.apply_updates(kinds, keys)).all()
+    assert (D.live_keys(fcfg, f) == oracle.keys()).all()
+live = oracle.keys()
+q = rng.integers(0, 320, size=32).astype(np.int32)
+sf, sv = D.successor_jit(fcfg, f, jnp.asarray(q))
+idx = np.searchsorted(live, q, side="right")
+ef = idx < live.size
+es = np.where(ef, live[np.minimum(idx, live.size - 1)], 0)
+np.testing.assert_array_equal(np.asarray(sf), ef)
+np.testing.assert_array_equal(np.asarray(sv)[ef], es[ef])
+print("FOREST SHARD_MAP OK")
+""", devices=8)
+    assert "FOREST SHARD_MAP OK" in out
+
+
+# --------------------------------------------------- map mode (x64) -------
+
+
+def test_forest_map_mode_x64():
+    out = run_py("""
+import numpy as np, jax.numpy as jnp
+from repro.core import TreeConfig
+from repro.core.oracle import MapOracle
+import repro.distributed as D
+
+fcfg = D.ForestConfig(
+    num_shards=4,
+    tree=TreeConfig(height=4, max_dnodes=256, buf_cap=8, payload_bits=8),
+    key_max=500)
+f = D.empty(fcfg)
+oracle = MapOracle()
+rng = np.random.default_rng(6)
+for step in range(5):
+    kinds = rng.integers(1, 3, size=16).astype(np.int32)
+    keys = rng.integers(1, 400, size=16).astype(np.int32)
+    pays = rng.integers(0, 255, size=16).astype(np.int32)
+    found, pay, _ = D.lookup_batch(fcfg, f, jnp.asarray(keys))
+    ef, ep = oracle.snapshot_lookup(keys)
+    assert (np.asarray(found) == ef).all()
+    assert (np.asarray(pay)[ef] == ep[ef]).all()
+    f, res, _ = D.update_batch(fcfg, f, jnp.asarray(kinds),
+                               jnp.asarray(keys), jnp.asarray(pays))
+    oracle.apply_updates(kinds, keys, pays)
+    assert D.live_items(fcfg, f) == oracle.items(), step
+print("FOREST MAP MODE OK")
+""", x64=True)
+    assert "FOREST MAP MODE OK" in out
+
+
+def test_sharded_pager_x64_8_devices():
+    out = run_py("""
+import numpy as np
+from repro.serving import ShardedDeltaPager, ShardedPagerConfig
+
+pc = ShardedPagerConfig(num_pages=128, page_size=4, max_seqs=32,
+                        max_blocks=64, tree_height=4, num_shards=4)
+pg = ShardedDeltaPager(pc)
+p0 = pg.allocate(0, 3)
+p1 = pg.allocate(9, 2)          # different shard band than seq 0
+assert len(set(p0) | set(p1)) == 5
+bt = pg.block_tables([0, 9], 4)
+assert (bt[0, :3] == p0).all() and bt[0, 3] == -1
+assert (bt[1, :2] == p1).all() and (bt[1, 2:] == -1).all()
+p0b = pg.allocate(0, 2)
+bt = pg.block_tables([0], 5)
+assert (bt[0] == p0 + p0b).all()
+pg.free_seq(0)
+assert len(pg.free_pages) == 128 - 2
+bt = pg.block_tables([0, 9], 4)
+assert (bt[0] == -1).all()
+pg.free_seq(9)
+assert sorted(pg.free_pages) == list(range(128))
+print("SHARDED PAGER OK", pg.stats)
+""", devices=8, x64=True)
+    assert "SHARDED PAGER OK" in out

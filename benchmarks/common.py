@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: timed op-mix runner for ΔTree + baselines.
+"""Shared benchmark utilities: timed op-mix runner over the Index API.
 
 Maps the paper's experiment protocol (§5) to the batched-SPMD world:
 - concurrency = batch width of one SPMD step (the paper's thread count),
@@ -6,17 +6,46 @@ Maps the paper's experiment protocol (§5) to the batched-SPMD world:
   searches; searches run vectorized on the snapshot (wait-free), updates
   apply in batch order,
 - performance = ops/second over `total_ops` with the jit warm.
+
+Every structure runs through the same ``make_index`` factory — a benchmark
+names a backend string, never a concrete engine.  All RNGs derive from one
+``--seed`` flag (``add_common_args``), and every emitted JSON row records
+``seed`` + ``backend`` so perf rows are reproducible.
 """
 
 from __future__ import annotations
 
+import json
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import TreeConfig, bulk_build, search_jit, update_batch
-from repro.core import baselines as BL
+from repro.api import OpBatch, make_index
+
+DEFAULT_SEED = 0
+
+# Backends whose update kernel rebuilds per op (O(cap) sequential work):
+# compact each step's update rows into one fixed UPDATE_CHUNK-wide
+# sub-batch (padded with OP_SEARCH no-ops, so shapes stay static).
+CHUNKED_BACKENDS = {"sorted_array", "pointer_bst", "static_veb"}
+UPDATE_CHUNK = 64
+
+
+def add_common_args(ap) -> None:
+    """--seed / --backend flags shared by every benchmark CLI."""
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED,
+                    help="root seed for every RNG (recorded in JSON rows)")
+    ap.add_argument("--backend", default=None,
+                    help="run only this registered Index backend "
+                         "(default: the benchmark's historical set)")
+
+
+def emit(row: dict) -> dict:
+    """One machine-parsable JSON row per result line."""
+    print(json.dumps(row), flush=True)
+    return row
 
 
 def mixed_kinds(rng, k: int, update_pct: float) -> np.ndarray:
@@ -26,69 +55,87 @@ def mixed_kinds(rng, k: int, update_pct: float) -> np.ndarray:
     return kinds
 
 
-def run_deltatree(height: int, initial: np.ndarray, key_max: int,
-                  update_pct: float, batch: int, total_ops: int,
-                  max_dnodes: int, seed: int = 0) -> dict:
-    cfg = TreeConfig(height=height, max_dnodes=max_dnodes, buf_cap=32,
-                     max_rounds=256)
-    tree = bulk_build(cfg, initial)
-    rng = np.random.default_rng(seed)
-    # warmup compile
-    kinds = mixed_kinds(rng, batch, update_pct)
-    keys = rng.integers(1, key_max, size=batch).astype(np.int32)
-    f, _ = search_jit(cfg, tree, jnp.asarray(keys)); f.block_until_ready()
-    if update_pct > 0:
-        tree, r, _ = update_batch(cfg, tree, jnp.asarray(kinds), jnp.asarray(keys))
-        r.block_until_ready()
+def backend_kwargs(backend: str, n_keys: int, *, key_max: int,
+                   total_ops: int = 0, height: int = 7,
+                   num_shards: int = 4) -> dict:
+    """make_index config for a benchmark-scale instance of ``backend``.
 
-    steps = max(total_ops // batch, 1)
-    n_search = n_update = 0
+    Sizing accounts for workload growth: up to total_ops/2 inserts can land
+    on fresh keys, so arenas/capacities are provisioned for n + total/2.
+    """
+    n_eff = n_keys + total_ops // 2
+    if backend == "deltatree":
+        return dict(height=height, buf_cap=32, max_rounds=256,
+                    max_dnodes=max(256, int(6 * n_eff / 2 ** (height - 1))))
+    if backend == "forest":
+        per_shard = max(64, int(8 * n_eff / num_shards / 2 ** (height - 1)))
+        return dict(num_shards=num_shards, key_max=key_max, height=height,
+                    buf_cap=32, max_rounds=256, max_dnodes=per_shard)
+    if backend in ("sorted_array", "pointer_bst"):
+        return dict(cap=2 * n_keys + total_ops + 16)
+    return {}
+
+
+def _chunk_updates(kinds: np.ndarray, keys: np.ndarray,
+                   idx: np.ndarray) -> OpBatch:
+    """Compact the update rows at ``idx`` into a fixed-width OpBatch (padded
+    with OP_SEARCH rows, which insert_delete treats as no-ops)."""
+    ck = np.zeros(UPDATE_CHUNK, np.int32)
+    cv = np.zeros(UPDATE_CHUNK, np.int32)
+    ck[: idx.size] = kinds[idx]
+    cv[: idx.size] = keys[idx]
+    return OpBatch.mixed(ck, cv)
+
+
+def run_index(backend: str, initial: np.ndarray, key_hi: int,
+              update_pct: float, batch: int, total_ops: int,
+              seed: int = DEFAULT_SEED, **make_kw) -> dict:
+    """Timed mixed workload against one backend through the Index handle."""
+    ix = make_index(backend, initial=initial, **make_kw)
+    rng = np.random.default_rng(seed)
+    chunked = backend in CHUNKED_BACKENDS
     any_update = update_pct > 0
-    t0 = time.perf_counter()
-    for _ in range(steps):
+
+    def one_step(ix, count=False):
+        nonlocal n_search, n_update
         kinds = mixed_kinds(rng, batch, update_pct)
-        keys = rng.integers(1, key_max, size=batch).astype(np.int32)
+        keys = rng.integers(1, key_hi, size=batch).astype(np.int32)
         # fixed shapes: searches on the whole batch (wait-free snapshot);
-        # updates ride the whole batch too with OP_SEARCH rows as no-ops —
-        # avoids per-step recompiles from dynamic sub-batch sizes
-        f, _ = search_jit(cfg, tree, jnp.asarray(keys))
-        n_search += int((kinds == 0).sum())
+        # updates ride a whole fixed-shape batch too, with OP_SEARCH rows
+        # as no-ops — avoids per-step recompiles from dynamic sub-batches
+        found, _ = ix.search(jnp.asarray(keys))
+        n_upd_step = 0
         if any_update:
-            tree, r, _ = update_batch(cfg, tree, jnp.asarray(kinds),
-                                      jnp.asarray(keys))
-            n_update += int((kinds != 0).sum())
-    if any_update:
-        tree.value.block_until_ready()
-    else:
-        f.block_until_ready()
-    dt = time.perf_counter() - t0
-    return {"ops_per_s": (n_search + n_update) / dt, "seconds": dt,
-            "n_search": n_search, "n_update": n_update}
+            uidx = np.flatnonzero(kinds != 0)
+            if chunked:
+                uidx = uidx[:UPDATE_CHUNK]
+                ub = _chunk_updates(kinds, keys, uidx)
+            else:
+                ub = OpBatch.mixed(kinds, keys)
+            ix, _ = ix.insert_delete(ub)
+            n_upd_step = int(uidx.size)
+        if count:  # host-side only — never syncs the device mid-loop
+            n_search += int((kinds == 0).sum())
+            n_update += n_upd_step
+        return ix, found
 
-
-def run_baseline(BLcls, initial: np.ndarray, key_max: int, update_pct: float,
-                 batch: int, total_ops: int, seed: int = 0) -> dict:
-    st = BLcls.build(initial, cap=2 * len(initial) + total_ops + 16) \
-        if BLcls in (BL.SortedArray, BL.PointerBST) else BLcls.build(initial)
-    rng = np.random.default_rng(seed)
-    keys = rng.integers(1, key_max, size=batch).astype(np.int32)
-    f = BLcls.search(st, jnp.asarray(keys)); f.block_until_ready()
-    has_update = hasattr(BLcls, "update")
-    steps = max(total_ops // batch, 1)
     n_search = n_update = 0
-    up = update_pct if has_update else 0
+    # warmup compile — two iterations: a sharded backend's first update
+    # output carries mesh shardings the host-built input didn't, so the
+    # second call retraces once; after that the jit cache is steady
+    for _ in range(2):
+        ix, found = one_step(ix)
+    n_search = n_update = 0
+
+    steps = max(total_ops // batch, 1)
     t0 = time.perf_counter()
     for _ in range(steps):
-        kinds = mixed_kinds(rng, batch, up)
-        keys = rng.integers(1, key_max, size=batch).astype(np.int32)
-        f = BLcls.search(st, jnp.asarray(keys))
-        n_search += int((kinds == 0).sum())
-        if up > 0 and (kinds != 0).any():
-            umask = kinds != 0
-            st, r = BLcls.update(st, jnp.asarray(kinds[umask][:64]),
-                                 jnp.asarray(keys[umask][:64]))
-            n_update += int(min(umask.sum(), 64))
-    jnp.zeros(1).block_until_ready()
+        ix, found = one_step(ix, count=True)
+    jax.block_until_ready(
+        [x for x in jax.tree.leaves(ix.state) if hasattr(x, "block_until_ready")])
+    found.block_until_ready()
     dt = time.perf_counter() - t0
-    return {"ops_per_s": (n_search + n_update) / dt, "seconds": dt,
-            "n_search": n_search, "n_update": n_update}
+    return {"backend": backend, "seed": seed, "update_pct": update_pct,
+            "batch": batch, "ops_per_s": round((n_search + n_update) / dt, 1),
+            "seconds": round(dt, 4), "n_search": n_search,
+            "n_update": n_update}

@@ -1,47 +1,54 @@
 """Fig. 11 reproduction: small tree (1,023 initial keys), throughput vs
 update rate vs concurrency, ΔTree vs AVL/RB/SF analogs (pointer BST),
-static vEB (VTMtree) and sorted array."""
+static vEB (VTMtree) and sorted array — every structure through the same
+`make_index` factory (`--backend` narrows to one)."""
 
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
-from benchmarks.common import run_baseline, run_deltatree
-from repro.core import baselines as BL
+from benchmarks.common import (
+    DEFAULT_SEED, add_common_args, backend_kwargs, emit, run_index,
+)
 
 KEY_MAX = 5_000_000          # paper: values in (0, 5e6]
 INITIAL = 1023
 UPDATE_RATES = (0, 1, 5, 10, 20, 100)   # paper: {0,1,3,5,10,20,100}
 CONCURRENCY = (64, 256, 1024)           # SPMD batch width (thread analog)
+DEFAULT_BACKENDS = ("deltatree", "pointer_bst", "sorted_array", "static_veb")
 
 
-def run(total_ops: int = 50_000, quick: bool = False):
-    rng = np.random.default_rng(42)
+def run(total_ops: int = 50_000, quick: bool = False,
+        seed: int = DEFAULT_SEED, backend: str | None = None):
+    rng = np.random.default_rng(seed)
     initial = np.unique(rng.integers(1, KEY_MAX, size=INITIAL).astype(np.int32))
     rows = []
     rates = UPDATE_RATES[:3] if quick else UPDATE_RATES
     concs = CONCURRENCY[1:2] if quick else CONCURRENCY
+    names = (backend,) if backend else DEFAULT_BACKENDS
     for u in rates:
         for c in concs:
-            r = run_deltatree(7, initial, KEY_MAX, u, c, total_ops,
-                              max_dnodes=4096)
-            rows.append(("deltatree_ub127", u, c, r["ops_per_s"]))
-            for Bl in (BL.PointerBST, BL.SortedArray):
-                r = run_baseline(Bl, initial, KEY_MAX, u, c, total_ops)
-                rows.append((Bl.name, u, c, r["ops_per_s"]))
-            if u == 0:  # static vEB cannot update in place (paper's point)
-                r = run_baseline(BL.StaticVEB, initial, KEY_MAX, 0, c, total_ops)
-                rows.append((BL.StaticVEB.name, u, c, r["ops_per_s"]))
+            for name in names:
+                if name == "static_veb" and u > 0 and backend is None:
+                    continue  # static vEB cannot update in place (paper's point)
+                r = run_index(name, initial, KEY_MAX, u, c, total_ops,
+                              seed=seed,
+                              **backend_kwargs(name, initial.size,
+                                               key_max=KEY_MAX,
+                                               total_ops=total_ops))
+                rows.append(emit({"bench": "fig11", **r}))
     return rows
 
 
-def main(quick=True):
-    rows = run(quick=quick)
-    for name, u, c, ops in rows:
-        us = 1e6 / ops
-        print(f"fig11/{name}/u{u}/c{c},{us:.3f},{ops:.0f}")
-    return rows
+def main(quick=True, seed=DEFAULT_SEED, backend=None):
+    return run(quick=quick, seed=seed, backend=backend)
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    add_common_args(ap)
+    args = ap.parse_args()
+    main(quick=not args.full, seed=args.seed, backend=args.backend)

@@ -1,50 +1,55 @@
 """Fig. 12 reproduction: big tree (2.5M initial keys — larger than cache),
-throughput vs update rate vs concurrency."""
+throughput vs update rate vs concurrency, all structures through
+`make_index` (`--backend` narrows to one)."""
 
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
-from benchmarks.common import run_baseline, run_deltatree
-from repro.core import baselines as BL
+from benchmarks.common import (
+    DEFAULT_SEED, add_common_args, backend_kwargs, emit, run_index,
+)
 
 KEY_MAX = 5_000_000
 INITIAL = 2_500_000
 UPDATE_RATES = (0, 1, 10, 20, 100)
 CONCURRENCY = (256, 1024)
+DEFAULT_BACKENDS = ("deltatree", "pointer_bst", "sorted_array", "static_veb")
 
 
 def run(total_ops: int = 30_000, quick: bool = False,
-        initial_size: int | None = None):
-    rng = np.random.default_rng(43)
+        initial_size: int | None = None, seed: int = DEFAULT_SEED,
+        backend: str | None = None):
+    rng = np.random.default_rng(seed)
     n = initial_size or (200_000 if quick else INITIAL)
     initial = np.unique(rng.integers(1, KEY_MAX, size=n).astype(np.int32))
     rows = []
     rates = (0, 10) if quick else UPDATE_RATES
     concs = (1024,) if quick else CONCURRENCY
+    names = (backend,) if backend else DEFAULT_BACKENDS
     for u in rates:
         for c in concs:
-            need = max(8192, 1 << (4 * initial.size // 32).bit_length())
-            r = run_deltatree(7, initial, KEY_MAX, u, c, total_ops,
-                              max_dnodes=need)
-            rows.append(("deltatree_ub127", u, c, r["ops_per_s"]))
-            for Bl in (BL.PointerBST, BL.SortedArray):
-                r = run_baseline(Bl, initial, KEY_MAX, u, c, total_ops)
-                rows.append((Bl.name, u, c, r["ops_per_s"]))
-            if u == 0:
-                r = run_baseline(BL.StaticVEB, initial, KEY_MAX, 0, c,
-                                 total_ops)
-                rows.append((BL.StaticVEB.name, u, c, r["ops_per_s"]))
+            for name in names:
+                if name == "static_veb" and u > 0 and backend is None:
+                    continue
+                r = run_index(name, initial, KEY_MAX, u, c, total_ops,
+                              seed=seed,
+                              **backend_kwargs(name, initial.size,
+                                               key_max=KEY_MAX,
+                                               total_ops=total_ops))
+                rows.append(emit({"bench": "fig12", **r}))
     return rows
 
 
-def main(quick=True):
-    rows = run(quick=quick)
-    for name, u, c, ops in rows:
-        us = 1e6 / ops
-        print(f"fig12/{name}/u{u}/c{c},{us:.3f},{ops:.0f}")
-    return rows
+def main(quick=True, seed=DEFAULT_SEED, backend=None):
+    return run(quick=quick, seed=seed, backend=backend)
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    add_common_args(ap)
+    args = ap.parse_args()
+    main(quick=not args.full, seed=args.seed, backend=args.backend)

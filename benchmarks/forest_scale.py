@@ -1,12 +1,12 @@
 """DeltaForest scaling sweep: shard count x batch size vs single-tree baseline.
 
 For each (shards, batch) point the same randomized mixed workload (search +
-insert/delete at ``update_pct``) runs against a DeltaForest and against the
-single-ΔTree baseline built from the same initial key set, with the jit
-warm.  Emits one JSON row per point on stdout (machine-parsable, one line
-each), e.g.::
+insert/delete at ``update_pct``) runs against the ``forest`` backend and
+against the ``deltatree`` baseline built from the same initial key set —
+both through ``make_index`` — with the jit warm.  Emits one JSON row per
+point on stdout (machine-parsable, one line each), e.g.::
 
-    {"bench": "forest_scale", "shards": 4, "batch": 1024, ...
+    {"bench": "forest_scale", "shards": 4, "batch": 1024, "seed": 0, ...
      "ops_per_s": ..., "baseline_ops_per_s": ..., "speedup": ...}
 
 On a single CPU device the forest's "shards" mesh degenerates to vmap, so
@@ -18,111 +18,66 @@ to exercise true shard_map fan-out.
 from __future__ import annotations
 
 import argparse
-import json
-import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import mixed_kinds, run_deltatree
-import repro.distributed as D
-from repro.core import TreeConfig
+from benchmarks.common import (
+    DEFAULT_SEED, add_common_args, backend_kwargs, emit, run_index,
+)
 
 KEY_MAX = 2_000_000
 
 
-def _forest_cfg(num_shards: int, height: int, n_keys: int) -> D.ForestConfig:
-    per_shard = max(64, int(4 * n_keys / num_shards / (2 ** (height - 1))))
-    return D.ForestConfig(
-        num_shards=num_shards,
-        tree=TreeConfig(height=height, max_dnodes=per_shard, buf_cap=32,
-                        max_rounds=256),
-        key_max=KEY_MAX,
-    )
-
-
-def run_forest(num_shards: int, height: int, initial: np.ndarray,
-               update_pct: float, batch: int, total_ops: int,
-               seed: int = 0) -> dict:
-    fcfg = _forest_cfg(num_shards, height, initial.size)
-    forest = D.bulk_build(fcfg, initial)
-    rng = np.random.default_rng(seed)
-    # warmup compile — two feedback iterations: the first update's output
-    # carries the "shards"-mesh sharding (the host-built input doesn't), so
-    # the second call retraces once; after that the jit cache is steady
-    for _ in range(2):
-        kinds = mixed_kinds(rng, batch, update_pct)
-        keys = rng.integers(1, KEY_MAX, size=batch).astype(np.int32)
-        f, _ = D.search_batch(fcfg, forest, jnp.asarray(keys))
-        f.block_until_ready()
-        if update_pct > 0:
-            forest, r, _ = D.update_batch(fcfg, forest, jnp.asarray(kinds),
-                                          jnp.asarray(keys))
-            r.block_until_ready()
-
-    steps = max(total_ops // batch, 1)
-    n_search = n_update = 0
-    any_update = update_pct > 0
-    t0 = time.perf_counter()
-    for _ in range(steps):
-        kinds = mixed_kinds(rng, batch, update_pct)
-        keys = rng.integers(1, KEY_MAX, size=batch).astype(np.int32)
-        f, _ = D.search_batch(fcfg, forest, jnp.asarray(keys))
-        n_search += int((kinds == 0).sum())
-        if any_update:
-            forest, r, _ = D.update_batch(fcfg, forest, jnp.asarray(kinds),
-                                          jnp.asarray(keys))
-            n_update += int((kinds != 0).sum())
-    if any_update:
-        forest.trees.value.block_until_ready()
-    else:
-        f.block_until_ready()
-    dt = time.perf_counter() - t0
-    return {"ops_per_s": (n_search + n_update) / dt, "seconds": dt,
-            "n_search": n_search, "n_update": n_update}
-
-
 def run(shard_counts, batches, initial_size: int, total_ops: int,
-        update_pct: float, height: int = 7):
+        update_pct: float, height: int = 7, seed: int = DEFAULT_SEED):
     import jax
 
-    rng = np.random.default_rng(7)
+    rng = np.random.default_rng(seed)
     vals = np.unique(rng.integers(1, KEY_MAX, size=initial_size)
                      .astype(np.int32))
     rows = []
-    baseline_dnodes = max(64, int(4 * vals.size / (2 ** (height - 1))))
     for batch in batches:
-        base = run_deltatree(height, vals, KEY_MAX, update_pct, batch,
-                             total_ops, max_dnodes=baseline_dnodes)
+        base = run_index("deltatree", vals, KEY_MAX, update_pct, batch,
+                         total_ops, seed=seed,
+                         **backend_kwargs("deltatree", vals.size,
+                                          key_max=KEY_MAX, height=height,
+                                          total_ops=total_ops))
         for shards in shard_counts:
-            perf = run_forest(shards, height, vals, update_pct, batch,
-                              total_ops)
-            row = {
+            perf = run_index("forest", vals, KEY_MAX, update_pct, batch,
+                             total_ops, seed=seed,
+                             **backend_kwargs("forest", vals.size,
+                                              key_max=KEY_MAX, height=height,
+                                              num_shards=shards,
+                                              total_ops=total_ops))
+            rows.append(emit({
                 "bench": "forest_scale",
                 "shards": shards,
                 "batch": batch,
+                "seed": seed,
                 "devices": jax.device_count(),
                 "update_pct": update_pct,
                 "initial_keys": int(vals.size),
-                "ops_per_s": round(perf["ops_per_s"], 1),
-                "baseline_ops_per_s": round(base["ops_per_s"], 1),
+                "ops_per_s": perf["ops_per_s"],
+                "baseline_ops_per_s": base["ops_per_s"],
                 "speedup": round(perf["ops_per_s"] / base["ops_per_s"], 3),
-            }
-            rows.append(row)
-            print(json.dumps(row), flush=True)
+            }))
     return rows
 
 
-def main(quick=True):
+def main(quick=True, seed=DEFAULT_SEED, backend=None):
+    del backend  # this sweep is forest-vs-deltatree by construction
     if quick:
         return run(shard_counts=(1, 2, 4), batches=(256, 1024),
-                   initial_size=50_000, total_ops=8_000, update_pct=5.0)
+                   initial_size=50_000, total_ops=8_000, update_pct=5.0,
+                   seed=seed)
     return run(shard_counts=(1, 2, 4, 8), batches=(256, 1024, 4096),
-               initial_size=500_000, total_ops=100_000, update_pct=5.0)
+               initial_size=500_000, total_ops=100_000, update_pct=5.0,
+               seed=seed)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    add_common_args(ap)
     args = ap.parse_args()
-    main(quick=not args.full)
+    main(quick=not args.full, seed=args.seed)

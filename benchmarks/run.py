@@ -1,6 +1,9 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV lines (assignment contract). Default is the quick profile (CPU-
-# friendly); pass --full for the paper-scale sweep.
+# One function per paper table/figure. Every benchmark runs its structures
+# through the `repro.api.make_index` factory and prints one JSON row per
+# result line (each row records `seed` + `backend` for reproducibility).
+# Default is the quick profile (CPU-friendly); --full is the paper-scale
+# sweep; --backend narrows every benchmark to one registered backend;
+# --seed reseeds every RNG.
 from __future__ import annotations
 
 import argparse
@@ -9,12 +12,14 @@ import subprocess
 import sys
 
 
-def _in_x64_subprocess(module: str, quick: bool):
+def _in_x64_subprocess(module: str, quick: bool, seed: int,
+                       backend: str | None):
     """serve bench needs JAX_ENABLE_X64; run isolated."""
     env = dict(os.environ)
     env["JAX_ENABLE_X64"] = "1"
     env.setdefault("PYTHONPATH", "src")
-    code = (f"from {module} import main; main(quick={quick})")
+    code = (f"from {module} import main; "
+            f"main(quick={quick}, seed={seed}, backend={backend!r})")
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True)
     sys.stdout.write(out.stdout)
@@ -24,13 +29,17 @@ def _in_x64_subprocess(module: str, quick: bool):
 
 
 def main() -> None:
+    from benchmarks.common import add_common_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="fig11|fig12|table1|ub_sweep|serve|forest")
+    add_common_args(ap)
     args, _ = ap.parse_known_args()
     quick = not args.full
+    seed, backend = args.seed, args.backend
 
     from benchmarks import fig11_small_tree, fig12_big_tree, table1_transfers
     from benchmarks import forest_scale, ub_sweep
@@ -38,17 +47,17 @@ def main() -> None:
     todo = args.only.split(",") if args.only else [
         "table1", "ub_sweep", "fig11", "fig12", "serve", "forest"]
     if "table1" in todo:
-        table1_transfers.main(quick=quick)
+        table1_transfers.main(quick=quick, seed=seed, backend=backend)
     if "ub_sweep" in todo:
-        ub_sweep.main(quick=quick)
+        ub_sweep.main(quick=quick, seed=seed, backend=backend)
     if "fig11" in todo:
-        fig11_small_tree.main(quick=quick)
+        fig11_small_tree.main(quick=quick, seed=seed, backend=backend)
     if "fig12" in todo:
-        fig12_big_tree.main(quick=quick)
+        fig12_big_tree.main(quick=quick, seed=seed, backend=backend)
     if "serve" in todo:
-        _in_x64_subprocess("benchmarks.serve_paged", quick)
+        _in_x64_subprocess("benchmarks.serve_paged", quick, seed, backend)
     if "forest" in todo:
-        forest_scale.main(quick=quick)
+        forest_scale.main(quick=quick, seed=seed)
 
 
 if __name__ == '__main__':

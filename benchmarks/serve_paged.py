@@ -1,30 +1,50 @@
-"""Beyond-paper serving benchmark: ΔTree-paged decode vs dense-cache decode
+"""Beyond-paper serving benchmark: Index-paged decode vs dense-cache decode
 (per step wall time at smoke scale on CPU) + pager hot-path stats.
 
-Run under JAX_ENABLE_X64=1 (map-mode ΔTree); benchmarks.run spawns it so.
+``--backend`` picks the pager's Index backend (``deltatree`` single arena
+or ``forest`` sharded) through the same factory path the engine uses.
+
+Run under JAX_ENABLE_X64=1 (map-mode packed values); benchmarks.run spawns
+it so.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
+from benchmarks.common import DEFAULT_SEED, add_common_args, emit
 
-def run(steps: int = 10):
+
+def run(steps: int = 10, seed: int = DEFAULT_SEED,
+        backend: str | None = None):
     import jax
     import jax.numpy as jnp
     from repro.configs import get_smoke_config
     from repro.models.registry import api
-    from repro.serving import PagerConfig, ServeEngine
+    from repro.serving import PagerConfig, ServeEngine, ShardedPagerConfig
 
+    backend = backend or "deltatree"
+    if backend not in ("deltatree", "forest"):
+        # the pager needs a map-mode index; only the tree backends pack
+        # payloads — note and skip instead of failing the whole sweep
+        return {"bench": "serve_paged", "backend": backend,
+                "skipped": "pager needs a map-mode (payload) backend"}
     cfg = get_smoke_config("granite_8b")
     m = api(cfg)
     params = m.init_params(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(3)
-    pc = PagerConfig(num_pages=256, page_size=8, max_seqs=32, max_blocks=128,
-                     tree_height=5)
+    rng = np.random.default_rng(seed)
+    pager_kw = dict(num_pages=256, page_size=8, max_seqs=32, max_blocks=128,
+                    tree_height=5)
+    if backend == "forest":
+        pc = ShardedPagerConfig(num_shards=4, **pager_kw)
+    else:
+        assert backend == "deltatree", f"no pager mapping for {backend!r}"
+        pc = PagerConfig(**pager_kw)
     eng = ServeEngine(cfg, params, pc, max_batch=8)
+    assert eng.pager.index.backend == backend
     for n in (12, 20, 7, 30, 16, 9, 24, 11):
         eng.submit(rng.integers(1, cfg.vocab_size, size=n).astype(np.int32),
                    max_new=steps + 2)
@@ -42,23 +62,25 @@ def run(steps: int = 10):
     tok = toks[:, -1:]
     lg, caches = m.decode_step(params, tok, caches, ln)  # warm
     t0 = time.perf_counter()
-    for i in range(steps):
+    for _ in range(steps):
         lg, caches = m.decode_step(params, tok, caches, ln)
     jax.block_until_ready(lg)
     dense = (time.perf_counter() - t0) / steps
-    return {"paged_step_s": dt, "dense_step_s": dense,
-            "pager": dict(eng.pager.stats)}
+    s = eng.pager.stats
+    return {"bench": "serve_paged", "backend": backend, "seed": seed,
+            "paged_step_us": round(dt * 1e6), "dense_step_us": round(dense * 1e6),
+            "pager_searches": s["searches"], "pager_inserts": s["inserts"],
+            "pager_deletes": s["deletes"],
+            "hops_per_search": round(s["hops"] / max(s["searches"], 1), 2)}
 
 
-def main(quick=True):
-    r = run(steps=5 if quick else 20)
-    print(f"serve/paged_step,{r['paged_step_s']*1e6:.0f},us_per_step")
-    print(f"serve/dense_step,{r['dense_step_s']*1e6:.0f},us_per_step")
-    s = r["pager"]
-    print(f"serve/pager_searches,{s['searches']},"
-          f"hops_per_search={s['hops']/max(s['searches'],1):.2f}")
-    return r
+def main(quick=True, seed=DEFAULT_SEED, backend=None):
+    return emit(run(steps=5 if quick else 20, seed=seed, backend=backend))
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    add_common_args(ap)
+    args = ap.parse_args()
+    main(quick=not args.full, seed=args.seed, backend=args.backend)

@@ -2,7 +2,8 @@
 
 The paper profiles cache misses with Valgrind; we count transfers exactly in
 the ideal-cache model (DESIGN.md §2): elements touched ("load count" analog)
-and distinct B-element blocks per search ("LLC miss" analog), for:
+and distinct B-element blocks per search ("LLC miss" analog), for every
+registered backend that exposes a touch trace (`Index.touch_fn`):
   - ΔTree UB=127 (dynamic vEB, the paper's best),
   - ΔTree UB=N (one giant ΔNode = leaf-oriented static vEB),
   - static vEB monolith (VTMtree: values at internal nodes),
@@ -12,63 +13,70 @@ Tree pre-filled with 1,048,576 random keys in (0, 5e6] (paper's setup).
 
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
-from repro.core import TreeConfig, bulk_build
-from repro.core import baselines as BL
-from repro.core.transfers import delta_touch_fn
+from benchmarks.common import DEFAULT_SEED, add_common_args, emit
+from repro.api import get_backend, make_index
 from repro.core.baselines import count_block_transfers
 
 KEY_MAX = 5_000_000
 INITIAL = 1 << 20
+DEFAULT_BACKENDS = ("deltatree", "static_veb", "pointer_bst", "sorted_array")
 
 
 def _mean_loads(touch_fn, keys) -> float:
     return float(np.mean([len(touch_fn(int(k))) for k in keys]))
 
 
-def run(n_queries: int = 300, initial_size: int = INITIAL):
-    rng = np.random.default_rng(44)
+def _profile(label: str, ix, q, seed: int) -> dict:
+    tf = ix.touch_fn()
+    assert tf is not None, f"backend {ix.backend!r} exposes no touch trace"
+    return {"bench": "table1", "backend": label, "seed": seed,
+            "loads": round(_mean_loads(tf, q), 2),
+            "blocks_b16": round(count_block_transfers(tf, q, 16), 2),
+            "blocks_b128": round(count_block_transfers(tf, q, 128), 2)}
+
+
+def run(n_queries: int = 300, initial_size: int = INITIAL,
+        seed: int = DEFAULT_SEED, backend: str | None = None):
+    rng = np.random.default_rng(seed)
     vals = np.unique(rng.integers(1, KEY_MAX, size=initial_size)
                      .astype(np.int32))
     q = rng.integers(1, KEY_MAX, size=n_queries).astype(np.int32)
     rows = []
-
-    # ΔTree UB=127 (dynamic vEB)
-    cfg = TreeConfig(height=7, max_dnodes=1 << 17, buf_cap=16)
-    t = bulk_build(cfg, vals)
-    tf = delta_touch_fn(cfg, t)
-    rows.append(("deltatree_ub127", _mean_loads(tf, q),
-                 count_block_transfers(tf, q, 16),
-                 count_block_transfers(tf, q, 128)))
-
-    # ΔTree UB=N: one ΔNode covering everything = leaf-oriented static vEB
-    h_big = int(np.ceil(np.log2(vals.size))) + 2
-    cfg_big = TreeConfig(height=h_big, max_dnodes=4, buf_cap=16)
-    t_big = bulk_build(cfg_big, vals)
-    tfb = delta_touch_fn(cfg_big, t_big)
-    rows.append((f"deltatree_ubN(h={h_big})", _mean_loads(tfb, q),
-                 count_block_transfers(tfb, q, 16),
-                 count_block_transfers(tfb, q, 128)))
-
-    for Bl in (BL.StaticVEB, BL.PointerBST, BL.SortedArray):
-        st = Bl.build(vals)
-        tf = Bl.touch_fn(st)
-        rows.append((Bl.name, _mean_loads(tf, q),
-                     count_block_transfers(tf, q, 16),
-                     count_block_transfers(tf, q, 128)))
+    names = (backend,) if backend else DEFAULT_BACKENDS
+    for name in names:
+        if get_backend(name).touch is None:
+            # e.g. forest: no flat-address touch trace — note and skip
+            rows.append(emit({"bench": "table1", "backend": name,
+                              "skipped": "backend exposes no touch trace"}))
+            continue
+        kw = {}
+        if name == "deltatree":
+            kw = dict(height=7, max_dnodes=1 << 17, buf_cap=16)
+        rows.append(emit(_profile(
+            name, make_index(name, initial=vals, **kw), q, seed)))
+    if backend is None:
+        # ΔTree UB=N: one ΔNode covering everything = leaf-oriented static vEB
+        h_big = int(np.ceil(np.log2(vals.size))) + 2
+        ix_big = make_index("deltatree", initial=vals, height=h_big,
+                            max_dnodes=4, buf_cap=16)
+        rows.append(emit(_profile(
+            f"deltatree_ubN(h={h_big})", ix_big, q, seed)))
     return rows
 
 
-def main(quick=True):
-    rows = run(n_queries=150 if quick else 500,
-               initial_size=(1 << 17) if quick else INITIAL)
-    for name, loads, b16, b128 in rows:
-        print(f"table1/{name}/loads,{loads:.2f},elements")
-        print(f"table1/{name}/blocks_B16,{b16:.2f},transfers")
-        print(f"table1/{name}/blocks_B128,{b128:.2f},transfers")
-    return rows
+def main(quick=True, seed=DEFAULT_SEED, backend=None):
+    return run(n_queries=150 if quick else 500,
+               initial_size=(1 << 17) if quick else INITIAL,
+               seed=seed, backend=backend)
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    add_common_args(ap)
+    args = ap.parse_args()
+    main(quick=not args.full, seed=args.seed, backend=args.backend)

@@ -1,51 +1,64 @@
 """§5 UB selection sweep: ΔNode size ∈ {31, 127, 1023, 8191} — the paper
 finds one "page" (127) best on its CPU; on TPU the tradeoff is DMA size vs
-tree hops (DESIGN.md §2, claim C4)."""
+tree hops (DESIGN.md §2, claim C4).  ``--backend forest`` sweeps the
+per-shard ΔNode size of a DeltaForest instead (same heights)."""
 
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
-from benchmarks.common import run_deltatree
-from repro.core import TreeConfig, bulk_build
-from repro.core.transfers import delta_touch_fn, delta_hops_fn
+from benchmarks.common import (
+    DEFAULT_SEED, add_common_args, backend_kwargs, emit, run_index,
+)
+from repro.api import make_index
 from repro.core.baselines import count_block_transfers
+from repro.core.transfers import delta_hops_fn
 
 KEY_MAX = 5_000_000
 HEIGHTS = (5, 7, 10, 13)      # UB = 31, 127, 1023, 8191
 
 
 def run(initial_size: int = 200_000, total_ops: int = 20_000,
-        update_pct: float = 5.0):
-    rng = np.random.default_rng(45)
+        update_pct: float = 5.0, seed: int = DEFAULT_SEED,
+        backend: str | None = None):
+    backend = backend or "deltatree"
+    if backend not in ("deltatree", "forest"):
+        # ΔNode height is meaningless for flat structures — note and skip
+        return [emit({"bench": "ub_sweep", "backend": backend,
+                      "skipped": "no ΔNode height to sweep"})]
+    rng = np.random.default_rng(seed)
     vals = np.unique(rng.integers(1, KEY_MAX, size=initial_size)
                      .astype(np.int32))
     q = rng.integers(1, KEY_MAX, size=200).astype(np.int32)
     rows = []
     for h in HEIGHTS:
-        ub = 2**h - 1
-        dnodes_needed = max(64, int(4 * vals.size / 2 ** (h - 1)))
-        cfg = TreeConfig(height=h, max_dnodes=dnodes_needed, buf_cap=32)
-        t = bulk_build(cfg, vals)
-        tf = delta_touch_fn(cfg, t)
-        hops = delta_hops_fn(cfg, t)
-        mean_hops = float(np.mean([hops(int(k)) for k in q]))
-        b128 = count_block_transfers(tf, q, 128)
-        perf = run_deltatree(h, vals, KEY_MAX, update_pct, 1024, total_ops,
-                             max_dnodes=dnodes_needed)
-        rows.append((ub, mean_hops, b128, perf["ops_per_s"]))
+        kw = backend_kwargs(backend, vals.size, key_max=KEY_MAX,
+                            total_ops=total_ops, height=h)
+        row = {"bench": "ub_sweep", "ub": 2**h - 1}
+        if backend == "deltatree":
+            # transfer profile on the pre-filled tree (ideal-cache model)
+            ix = make_index("deltatree", initial=vals, **kw)
+            hops = delta_hops_fn(ix.cfg, ix.state)
+            row["hops"] = round(float(np.mean([hops(int(k)) for k in q])), 2)
+            row["blocks_b128"] = round(
+                count_block_transfers(ix.touch_fn(), q, 128), 2)
+        perf = run_index(backend, vals, KEY_MAX, update_pct, 1024, total_ops,
+                         seed=seed, **kw)
+        rows.append(emit({**row, **perf}))
     return rows
 
 
-def main(quick=True):
-    rows = run(initial_size=100_000 if quick else 500_000,
-               total_ops=10_000 if quick else 50_000)
-    for ub, hops, b128, ops in rows:
-        print(f"ub_sweep/UB{ub}/hops,{hops:.2f},dnode_transfers")
-        print(f"ub_sweep/UB{ub}/blocks_B128,{b128:.2f},transfers")
-        print(f"ub_sweep/UB{ub}/throughput,{1e6/ops:.3f},{ops:.0f} ops/s")
-    return rows
+def main(quick=True, seed=DEFAULT_SEED, backend=None):
+    return run(initial_size=100_000 if quick else 500_000,
+               total_ops=10_000 if quick else 50_000,
+               seed=seed, backend=backend)
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    add_common_args(ap)
+    args = ap.parse_args()
+    main(quick=not args.full, seed=args.seed, backend=args.backend)

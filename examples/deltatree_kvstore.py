@@ -4,7 +4,9 @@
 
 Payloads ride in the low bits of the packed int64 node values, so ordering
 (and therefore the whole vEB routing machinery) is untouched — see
-core/deltatree.py MAP MODE.
+core/deltatree.py MAP MODE.  The store is an ordinary ``repro.api`` Index
+with ``payload_bits > 0``; swap the backend string for ``"forest"`` to
+shard it.
 """
 
 import jax
@@ -18,23 +20,21 @@ sys.path.insert(0, "src")
 import numpy as np  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import (  # noqa: E402
-    OP_DELETE, OP_INSERT, TreeConfig, bulk_build, lookup_jit, update_batch,
-)
+from repro.api import OpBatch, make_index  # noqa: E402
 
 
 def main():
-    cfg = TreeConfig(height=7, max_dnodes=1 << 12, buf_cap=32,
-                     payload_bits=20)
-
     rng = np.random.default_rng(0)
     keys = np.unique(rng.integers(1, 10_000_000, size=50_000).astype(np.int64))
     vals = rng.integers(0, 1 << 20, size=keys.size)
-    store = bulk_build(cfg, keys, vals)
-    print(f"kv store: {keys.size:,} entries")
+    ix = make_index("deltatree", initial=keys, payloads=vals,
+                    height=7, max_dnodes=1 << 12, buf_cap=32,
+                    payload_bits=20)
+    assert ix.capability.map_mode
+    print(f"kv store: {ix.size():,} entries")
 
     q = keys[rng.integers(0, keys.size, size=8)]
-    found, payload, hops = lookup_jit(cfg, store, jnp.asarray(q, jnp.int32))
+    found, payload, hops = ix.lookup(jnp.asarray(q, jnp.int32))
     for k, f, p in zip(q, np.asarray(found), np.asarray(payload)):
         expect = vals[np.searchsorted(keys, k)]
         print(f"  get({int(k)}) -> {int(p)} (expect {int(expect)})")
@@ -42,11 +42,9 @@ def main():
 
     # upsert-style: delete + insert with a new payload, in one batch
     k0 = int(q[0])
-    kinds = jnp.asarray([OP_DELETE, OP_INSERT], jnp.int32)
-    batch_keys = jnp.asarray([k0, k0], jnp.int32)
-    payloads = jnp.asarray([0, 123456], jnp.int32)
-    store, res, _ = update_batch(cfg, store, kinds, batch_keys, payloads)
-    found, payload, _ = lookup_jit(cfg, store, jnp.asarray([k0], jnp.int32))
+    ix, res = ix.insert_delete(OpBatch.mixed(
+        kinds=[2, 1], keys=[k0, k0], payloads=[0, 123456]))
+    found, payload, _ = ix.lookup(jnp.asarray([k0], jnp.int32))
     print(f"  after update: get({k0}) -> {int(payload[0])}")
     assert int(payload[0]) == 123456
 

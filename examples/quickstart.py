@@ -1,47 +1,51 @@
-"""Quickstart: the ΔTree public API in 60 lines.
+"""Quickstart: the handle-based Index API in 60 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+``make_index`` is the one entry point: the backend string picks the
+structure (``deltatree`` here; ``forest`` / ``sorted_array`` / ... are
+drop-ins), the handle carries the state, and every op is a jitted batched
+step.
 """
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (
-    OP_DELETE, OP_INSERT, TreeConfig, bulk_build, empty, search_jit,
-    update_batch,
-)
+from repro.api import OpBatch, make_index
 from repro.core.transfers import delta_hops_fn
 
 
 def main():
     # a ΔTree with page-sized ΔNodes (UB = 127, the paper's sweet spot)
-    cfg = TreeConfig(height=7, max_dnodes=1 << 16, buf_cap=32)
-
-    # bulk-load a million keys (half-dense ΔNodes, vEB layout inside each)
     rng = np.random.default_rng(0)
     keys = np.unique(rng.integers(1, 5_000_000, size=1_000_000).astype(np.int32))
-    tree = bulk_build(cfg, keys)
-    print(f"built ΔTree: {keys.size:,} keys, "
-          f"{int(np.asarray(tree.alive).sum()):,} ΔNodes")
+    ix = make_index("deltatree", initial=keys,
+                    height=7, max_dnodes=1 << 16, buf_cap=32)
+    print(f"built {ix!r}: {ix.size():,} keys, "
+          f"{int(np.asarray(ix.state.alive).sum()):,} ΔNodes")
 
     # wait-free batched search (one SPMD step = one linearization point)
     queries = rng.integers(1, 5_000_000, size=4096).astype(np.int32)
-    found, hops = search_jit(cfg, tree, jnp.asarray(queries))
+    found, hops = ix.search(jnp.asarray(queries))
     print(f"search: {int(np.asarray(found).sum())}/{queries.size} hits, "
           f"mean ΔNode hops {float(np.asarray(hops).mean()):.2f} "
           f"(= O(log_B N) memory transfers)")
 
-    # concurrent-batch updates: inserts + deletes in one step
-    kinds = np.asarray([OP_INSERT] * 4 + [OP_DELETE] * 4, np.int32)
-    vals = np.asarray([7, 9, 11, 13, int(keys[0]), int(keys[1]), 7, 999_999_937],
-                      np.int32)
-    tree, results, rounds = update_batch(
-        cfg, tree, jnp.asarray(kinds), jnp.asarray(vals))
-    print("updates:", dict(zip(vals.tolist(), np.asarray(results).tolist())),
-          f"(maintenance rounds: {int(rounds)})")
+    # concurrent-batch updates: inserts + deletes in one OpBatch step
+    batch = OpBatch.mixed(
+        kinds=[1, 1, 1, 1, 2, 2, 2, 2],
+        keys=[7, 9, 11, 13, int(keys[0]), int(keys[1]), 7, 999_999_937],
+    )
+    ix, results = ix.insert_delete(batch)
+    print("updates:", dict(zip(np.asarray(batch.keys).tolist(),
+                               np.asarray(results).tolist())))
+
+    # ordered queries ride the same handle (capability-gated)
+    sf, succ = ix.successor(jnp.asarray([7, 8], jnp.int32))
+    print(f"successor(7) -> {int(succ[0])}, successor(8) -> {int(succ[1])}")
 
     # exact ideal-cache transfer accounting (the paper's Table 1 metric)
-    hopf = delta_hops_fn(cfg, tree)
+    hopf = delta_hops_fn(ix.cfg, ix.state)
     sample = [hopf(int(k)) for k in queries[:100]]
     print(f"transfer model: {np.mean(sample):.2f} ΔNode transfers/search "
           f"for N={keys.size:,}, UB=127")

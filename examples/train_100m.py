@@ -16,7 +16,6 @@ sys.path.insert(0, "src")
 
 from repro.launch import train as TR  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
-import repro.configs as C  # noqa: E402
 
 # ~100M params: 12 layers, d_model 768, llama-style dense
 CONFIG_100M = ModelConfig(

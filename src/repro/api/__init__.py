@@ -1,0 +1,46 @@
+"""repro.api — one handle-based Index API over tree, forest, and baselines.
+
+The uniform dictionary surface (DESIGN.md §5):
+
+    ix = make_index("deltatree", initial=keys, height=7, max_dnodes=4096)
+    found, hops = ix.search(queries)               # wait-free snapshot read
+    ix, results = ix.insert_delete(OpBatch.inserts(new_keys))
+    found, succ = ix.successor(queries)            # capability-gated
+
+Backends register by name (``deltatree``, ``forest``, ``sorted_array``,
+``pointer_bst``, ``static_veb``); ``Capability`` declares what each
+supports.  ``Index`` is a pytree (state dynamic, spec static), ``OpBatch``
+a NamedTuple of arrays — both flow through jit / shard_map.
+"""
+
+from repro.api.index import (
+    BackendSpec,
+    Capability,
+    CapabilityError,
+    Index,
+    IndexSpec,
+)
+from repro.api.opbatch import OP_DELETE, OP_INSERT, OP_SEARCH, OpBatch
+from repro.api.registry import (
+    available_backends,
+    get_backend,
+    make_index,
+    register_backend,
+)
+from repro.api import backends as _backends  # noqa: F401  (registers built-ins)
+
+__all__ = [
+    "BackendSpec",
+    "Capability",
+    "CapabilityError",
+    "Index",
+    "IndexSpec",
+    "OpBatch",
+    "OP_SEARCH",
+    "OP_INSERT",
+    "OP_DELETE",
+    "available_backends",
+    "get_backend",
+    "make_index",
+    "register_backend",
+]

@@ -1,0 +1,276 @@
+"""Built-in Index backends: deltatree, forest, sorted_array (+ the paper's
+comparison structures pointer_bst and static_veb).
+
+Each entry adapts one existing engine to the uniform ``BackendSpec``
+contract — (cfg, state) construction, wait-free reads, batch-order
+``OpBatch`` updates with OP_SEARCH rows as no-ops, host-side debug views.
+Backends whose update kernel only understands insert/delete rows
+(``sorted_array``, ``pointer_bst``, ``static_veb``) neutralize search rows
+via ``OpBatch.mask_searches`` (a delete of key 0, which is never stored).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.index import BackendSpec, Capability
+from repro.api.opbatch import OpBatch
+from repro.api.registry import register_backend
+from repro.core import baselines as BL
+from repro.core import deltatree as DT
+from repro.core import transfers as TR
+from repro.core.deltatree import TreeConfig
+from repro.distributed import forest as F
+from repro.distributed.forest import ForestConfig
+
+_TREE_FIELDS = {f.name for f in dataclasses.fields(TreeConfig)}
+
+
+def _as_cfg(cls, cfg, kw):
+    if cfg is None:
+        return cls(**kw)
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+# --------------------------------------------------------------------------
+# deltatree — the paper's structure (repro.core single arena)
+# --------------------------------------------------------------------------
+
+
+def _dt_make(initial, payloads, cfg=None, **kw):
+    cfg = _as_cfg(TreeConfig, cfg, kw)
+    if initial is None:
+        return cfg, DT.empty(cfg)
+    return cfg, DT.bulk_build(cfg, np.asarray(initial), payloads)
+
+
+def _dt_update(cfg, t, batch: OpBatch):
+    t, res, _ = DT.update_batch(cfg, t, batch.kinds, batch.keys,
+                                batch.payloads)
+    return t, res
+
+
+def _dt_size(cfg, t) -> int:
+    # I5: buffers drain to empty inside every update step, so nlive+bcount
+    # over live arenas is exact between steps (cross-checked vs the oracle
+    # by the conformance suite).
+    return int(jnp.sum(jnp.where(t.alive, t.nlive + t.bcount, 0)))
+
+
+register_backend(BackendSpec(
+    name="deltatree",
+    make=_dt_make,
+    capability=lambda cfg: Capability(
+        map_mode=cfg.payload_bits > 0, successor=True, sharded=False),
+    search=DT.search_jit,
+    lookup=DT.lookup_jit,
+    update=_dt_update,
+    successor=DT.successor_jit,
+    live_items=DT.live_items,
+    size=_dt_size,
+    touch=TR.delta_touch_fn,
+    alloc_failed=lambda cfg, t: bool(t.alloc_fail),
+))
+
+
+# --------------------------------------------------------------------------
+# forest — key-range-sharded DeltaForest (repro.distributed)
+# --------------------------------------------------------------------------
+
+
+def _forest_make(initial, payloads, cfg=None, splits=None, **kw):
+    if cfg is None:
+        tree_kw = {k: kw.pop(k) for k in list(kw) if k in _TREE_FIELDS}
+        tree = kw.pop("tree", None) or TreeConfig(**tree_kw)
+        cfg = ForestConfig(tree=tree, **kw)
+    elif kw:
+        cfg = dataclasses.replace(cfg, **kw)
+    if initial is None:
+        return cfg, F.empty(cfg, splits)
+    return cfg, F.bulk_build(cfg, np.asarray(initial), payloads, splits)
+
+
+def _forest_update(cfg, f, batch: OpBatch):
+    f, res, _ = F.update_batch(cfg, f, batch.kinds, batch.keys,
+                               batch.payloads)
+    return f, res
+
+
+def _forest_size(cfg, f) -> int:
+    t = f.trees
+    return int(jnp.sum(jnp.where(t.alive, t.nlive + t.bcount, 0)))
+
+
+register_backend(BackendSpec(
+    name="forest",
+    make=_forest_make,
+    capability=lambda cfg: Capability(
+        map_mode=cfg.tree.payload_bits > 0, successor=True, sharded=True),
+    search=F.search_batch,
+    lookup=F.lookup_batch,
+    update=_forest_update,
+    successor=F.successor_jit,
+    live_items=F.live_items,
+    size=_forest_size,
+    alloc_failed=lambda cfg, f: F.alloc_failed(f),
+))
+
+
+# --------------------------------------------------------------------------
+# sorted_array — binary search + sort-merge rebuild (core.baselines)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SortedArrayConfig:
+    cap: int | None = None   # None: build auto-sizes to 2x the initial keys
+
+
+def _sa_make(initial, payloads, cfg=None, **kw):
+    cfg = _as_cfg(SortedArrayConfig, cfg, kw)
+    vals = np.asarray(initial) if initial is not None else np.zeros(0, np.int32)
+    return cfg, BL.SortedArray.build(vals, cap=cfg.cap)
+
+
+@jax.jit
+def _sa_search(state, keys):
+    found = BL.SortedArray.search(state, keys)
+    return found, jnp.zeros_like(keys)
+
+
+def _sa_update(cfg, state, batch: OpBatch):
+    kinds, keys, is_update = batch.mask_searches()
+    state, res = BL.SortedArray.update(state, kinds, keys)
+    return state, res & is_update
+
+
+@jax.jit
+def _sa_successor(state, keys):
+    keys = jnp.asarray(keys, jnp.int32)
+    i = jnp.searchsorted(state.vals, keys, side="right").astype(jnp.int32)
+    found = i < state.n
+    safe = jnp.clip(i, 0, state.vals.shape[0] - 1)
+    return found, jnp.where(found, state.vals[safe], 0)
+
+
+def _sa_live_items(cfg, state):
+    n = int(state.n)
+    return [(int(v), 0) for v in np.asarray(state.vals)[:n]]
+
+
+register_backend(BackendSpec(
+    name="sorted_array",
+    make=_sa_make,
+    capability=lambda cfg: Capability(successor=True),
+    search=lambda cfg, state, keys: _sa_search(state, keys),
+    update=_sa_update,
+    successor=lambda cfg, state, keys: _sa_successor(state, keys),
+    live_items=_sa_live_items,
+    size=lambda cfg, state: int(state.n),
+    touch=lambda cfg, state: BL.SortedArray.touch_fn(state),
+))
+
+
+# --------------------------------------------------------------------------
+# pointer_bst — heap-allocated BST analog (no locality; core.baselines)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PointerBSTConfig:
+    cap: int | None = None   # None: build auto-sizes to 2x the initial keys
+    seed: int = 0
+
+
+def _bst_make(initial, payloads, cfg=None, **kw):
+    cfg = _as_cfg(PointerBSTConfig, cfg, kw)
+    vals = np.asarray(initial) if initial is not None else np.zeros(0, np.int32)
+    return cfg, BL.PointerBST.build(vals, cap=cfg.cap, seed=cfg.seed)
+
+
+@jax.jit
+def _bst_search(state, keys):
+    return BL.PointerBST.search(state, keys), jnp.zeros_like(keys)
+
+
+def _bst_update(cfg, state, batch: OpBatch):
+    kinds, keys, is_update = batch.mask_searches()
+    state, res = BL.PointerBST.update(state, kinds, keys)
+    return state, res & is_update
+
+
+def _bst_live_items(cfg, state):
+    n = int(state.n)
+    vals = np.asarray(state.val)[:n]
+    mark = np.asarray(state.mark)[:n]
+    return [(int(v), 0) for v in np.sort(vals[~mark])]
+
+
+register_backend(BackendSpec(
+    name="pointer_bst",
+    make=_bst_make,
+    capability=lambda cfg: Capability(),
+    search=lambda cfg, state, keys: _bst_search(state, keys),
+    update=_bst_update,
+    live_items=_bst_live_items,
+    size=lambda cfg, state: int(state.n) - int(np.asarray(
+        state.mark)[: int(state.n)].sum()),
+    touch=lambda cfg, state: BL.PointerBST.touch_fn(state),
+))
+
+
+# --------------------------------------------------------------------------
+# static_veb — VTMtree analog: search-optimal, whole-layout rebuild updates
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticVEBConfig:
+    height: int | None = None   # None: minimal height for the build
+
+
+def _sv_make(initial, payloads, cfg=None, **kw):
+    cfg = _as_cfg(StaticVEBConfig, cfg, kw)
+    vals = np.asarray(initial) if initial is not None else np.zeros(0, np.int32)
+    return cfg, BL.StaticVEB.build(vals, height=cfg.height)
+
+
+def _sv_search(cfg, state, keys):
+    keys = jnp.asarray(keys, jnp.int32)
+    return BL.StaticVEB.search(state, keys), jnp.zeros_like(keys)
+
+
+def _sv_update(cfg, state, batch: OpBatch):
+    kinds = np.asarray(batch.kinds)
+    keys = np.asarray(batch.keys)
+    mask = kinds != DT.OP_SEARCH
+    res = np.zeros(len(keys), bool)
+    if mask.any():
+        state, sub = BL.StaticVEB.update(state, kinds[mask], keys[mask])
+        if cfg.height is not None and state.height != cfg.height:
+            # BL.StaticVEB.update rebuilds at minimal height; re-pin the
+            # configured layout (build still grows h if the set outgrew it)
+            state = BL.StaticVEB.build(BL.StaticVEB.to_sorted(state),
+                                       height=cfg.height)
+        res[mask] = np.asarray(sub)
+    return state, jnp.asarray(res)
+
+
+def _sv_live_items(cfg, state):
+    return [(int(v), 0) for v in BL.StaticVEB.to_sorted(state)]
+
+
+register_backend(BackendSpec(
+    name="static_veb",
+    make=_sv_make,
+    capability=lambda cfg: Capability(),
+    search=_sv_search,
+    update=_sv_update,
+    live_items=_sv_live_items,
+    size=lambda cfg, state: int(BL.StaticVEB.to_sorted(state).size),
+    touch=lambda cfg, state: BL.StaticVEB.touch_fn(state),
+))

@@ -1,0 +1,172 @@
+"""The Index handle: one method-style surface over every backend.
+
+An ``Index`` is (static spec, dynamic state):
+
+- ``spec`` — the registered ``BackendSpec`` (a table of pure functions)
+  plus the backend's hashable static config.  Static: it is the pytree
+  aux_data, so jitted functions closing over an ``Index`` specialize on
+  backend + config exactly like they specialize on ``TreeConfig`` today.
+- ``state`` — the backend's array state (a ``DeltaTree``, ``Forest``,
+  ``SortedArrayState``, ...).  Dynamic: it is the pytree child, so an
+  ``Index`` flows through ``jit`` / ``donate_argnums`` / ``shard_map``.
+
+Methods delegate through the spec; ``capability`` says which ones a
+backend supports (``CapabilityError`` otherwise).  ``insert_delete``
+returns a *new* handle — backends may donate the old state's buffers, so
+callers must rebind: ``ix, res = ix.insert_delete(batch)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.api.opbatch import OpBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class Capability:
+    """What an Index backend supports (conformance tests skip on these)."""
+
+    map_mode: bool = False    # key -> payload lookups (else set semantics)
+    successor: bool = False   # ordered successor queries
+    sharded: bool = False     # state fans out over a device mesh
+    updates: bool = True      # insert_delete supported at all
+
+
+class CapabilityError(NotImplementedError):
+    """Raised when an Index method is not in the backend's Capability."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Registry entry: a table of pure functions over (cfg, state).
+
+    Required hooks: ``make``, ``capability``, ``search``, ``update``,
+    ``live_items``, ``size``.  Optional hooks may be None and are gated by
+    ``capability(cfg)``: ``lookup`` (map_mode), ``successor``.  ``touch``
+    (ideal-cache touch traces, Table 1) and ``alloc_failed`` (sticky
+    arena-exhaustion flag) are optional diagnostics.
+    """
+
+    name: str
+    make: Callable[..., tuple[Any, Any]]        # (initial, payloads, **kw)
+    capability: Callable[[Any], Capability]     # cfg -> Capability
+    search: Callable[..., Any]                  # (cfg, state, keys) -> (found, hops)
+    update: Callable[..., Any]                  # (cfg, state, OpBatch) -> (state, results)
+    live_items: Callable[..., Any]              # (cfg, state) -> [(key, payload)]
+    size: Callable[..., int]                    # (cfg, state) -> int
+    lookup: Callable[..., Any] | None = None    # (cfg, state, keys) -> (found, payload, hops)
+    successor: Callable[..., Any] | None = None  # (cfg, state, keys) -> (found, succ)
+    touch: Callable[..., Any] | None = None     # (cfg, state) -> (key -> [flat indices])
+    alloc_failed: Callable[..., bool] | None = None  # (cfg, state) -> bool
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Hashable static half of an Index (pytree aux_data)."""
+
+    backend: BackendSpec
+    cfg: Any
+
+
+class Index:
+    """Handle over one backend instance. Pytree: state child, spec static."""
+
+    __slots__ = ("spec", "state")
+
+    def __init__(self, spec: IndexSpec, state: Any):
+        object.__setattr__(self, "spec", spec)
+        object.__setattr__(self, "state", state)
+
+    def __setattr__(self, name, value):
+        raise AttributeError(
+            "Index is immutable; rebind the handle returned by insert_delete")
+
+    def __repr__(self):
+        return (f"Index(backend={self.spec.backend.name!r}, "
+                f"cfg={self.spec.cfg!r})")
+
+    # ---- static introspection ----
+
+    @property
+    def backend(self) -> str:
+        return self.spec.backend.name
+
+    @property
+    def cfg(self) -> Any:
+        return self.spec.cfg
+
+    @property
+    def capability(self) -> Capability:
+        return self.spec.backend.capability(self.spec.cfg)
+
+    def _require(self, flag: str, hook) -> None:
+        if not getattr(self.capability, flag) or hook is None:
+            raise CapabilityError(
+                f"backend {self.backend!r} does not support {flag!r} "
+                f"(capability: {self.capability})")
+
+    # ---- wait-free reads ----
+
+    def search(self, keys: jax.Array):
+        """Membership on the current snapshot. Returns (found[K], hops[K])."""
+        return self.spec.backend.search(self.spec.cfg, self.state, keys)
+
+    def lookup(self, keys: jax.Array):
+        """Map-mode read. Returns (found[K], payload[K], hops[K])."""
+        self._require("map_mode", self.spec.backend.lookup)
+        return self.spec.backend.lookup(self.spec.cfg, self.state, keys)
+
+    def successor(self, keys: jax.Array):
+        """Smallest stored key strictly greater. Returns (found[K], succ[K])."""
+        self._require("successor", self.spec.backend.successor)
+        return self.spec.backend.successor(self.spec.cfg, self.state, keys)
+
+    # ---- updates ----
+
+    def insert_delete(self, batch: OpBatch):
+        """Apply one OpBatch in batch order. Returns (new Index, results[K]).
+
+        OP_SEARCH rows are no-ops with result False.  The old handle's
+        state may be donated — always rebind to the returned Index.
+        """
+        self._require("updates", self.spec.backend.update)
+        state, results = self.spec.backend.update(
+            self.spec.cfg, self.state, batch)
+        return Index(self.spec, state), results
+
+    # ---- host-side diagnostics ----
+
+    def size(self) -> int:
+        """Number of live keys (host-side)."""
+        return int(self.spec.backend.size(self.spec.cfg, self.state))
+
+    def live_items(self) -> list[tuple[int, int]]:
+        """All live (key, payload) pairs, key-sorted (host-side, for tests)."""
+        return list(self.spec.backend.live_items(self.spec.cfg, self.state))
+
+    def touch_fn(self):
+        """Host touch-trace fn (ideal-cache transfer counting) or None."""
+        if self.spec.backend.touch is None:
+            return None
+        return self.spec.backend.touch(self.spec.cfg, self.state)
+
+    def alloc_failed(self) -> bool:
+        """Sticky arena-exhaustion flag (False for unbounded backends)."""
+        if self.spec.backend.alloc_failed is None:
+            return False
+        return bool(self.spec.backend.alloc_failed(self.spec.cfg, self.state))
+
+
+def _flatten(ix: Index):
+    return (ix.state,), ix.spec
+
+
+def _unflatten(spec: IndexSpec, children) -> Index:
+    return Index(spec, children[0])
+
+
+jax.tree_util.register_pytree_node(Index, _flatten, _unflatten)

@@ -1,0 +1,63 @@
+"""OpBatch — first-class batched op representation for the Index API.
+
+One SPMD step applies one ``OpBatch``: ``kinds[i]`` says what op row ``i``
+is (OP_SEARCH rows are no-ops inside ``insert_delete`` — they exist so a
+mixed workload batch can ride one fixed-shape update step), ``keys[i]`` the
+int32 key, ``payloads[i]`` the int32 payload (ignored by set-mode
+backends).  An ``OpBatch`` is a plain NamedTuple of arrays, so it is a
+pytree and can be built, split, and consumed under ``jit`` / ``vmap`` /
+``shard_map`` without host round-trips.
+
+Row order is the linearization order: backends apply update rows in batch
+order, and per-op results are reported in the same order.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OP_SEARCH, OP_INSERT, OP_DELETE = 0, 1, 2
+
+
+class OpBatch(NamedTuple):
+    """A batch of dictionary ops in linearization order (all (K,) int32)."""
+
+    kinds: jax.Array     # OP_SEARCH | OP_INSERT | OP_DELETE per row
+    keys: jax.Array      # int32 keys (>= 1; 0 is the EMPTY sentinel)
+    payloads: jax.Array  # int32 payloads (map-mode backends only)
+
+    @classmethod
+    def mixed(cls, kinds, keys, payloads=None) -> "OpBatch":
+        """Wrap parallel (kinds, keys[, payloads]) arrays; payloads default 0."""
+        keys = jnp.asarray(keys, jnp.int32)
+        kinds = jnp.asarray(kinds, jnp.int32)
+        if payloads is None:
+            payloads = jnp.zeros_like(keys)
+        return cls(kinds, keys, jnp.asarray(payloads, jnp.int32))
+
+    @classmethod
+    def inserts(cls, keys, payloads=None) -> "OpBatch":
+        keys = jnp.asarray(keys, jnp.int32)
+        return cls.mixed(jnp.full(keys.shape, OP_INSERT, jnp.int32), keys,
+                         payloads)
+
+    @classmethod
+    def deletes(cls, keys) -> "OpBatch":
+        keys = jnp.asarray(keys, jnp.int32)
+        return cls.mixed(jnp.full(keys.shape, OP_DELETE, jnp.int32), keys)
+
+    @property
+    def size(self) -> int:
+        return self.keys.shape[0]
+
+    def mask_searches(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """(kinds, keys, is_update) with OP_SEARCH rows turned into no-op
+        deletes of key 0 (never stored — 0 is the EMPTY sentinel).  For
+        backends whose update kernel only understands insert/delete rows."""
+        is_update = self.kinds != OP_SEARCH
+        kinds = jnp.where(is_update, self.kinds, OP_DELETE)
+        keys = jnp.where(is_update, self.keys, 0)
+        return kinds, keys, is_update

@@ -1,0 +1,52 @@
+"""String-keyed backend registry + the ``make_index`` factory.
+
+``register_backend`` installs a ``BackendSpec`` under a name;
+``make_index("deltatree", initial=keys, height=7, ...)`` builds the
+backend's (cfg, state) pair and wraps it in an ``Index`` handle.  New
+comparison structures (non-blocking interpolation search trees,
+elimination (a,b)-trees, ...) plug in as registry entries — no new façade,
+no call-site changes.
+"""
+
+from __future__ import annotations
+
+from repro.api.index import BackendSpec, Index, IndexSpec
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register_backend(spec: BackendSpec, *, overwrite: bool = False) -> BackendSpec:
+    """Install ``spec`` under ``spec.name``; re-registration must opt in."""
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_index(backend: str = "deltatree", *, initial=None, payloads=None,
+               **kwargs) -> Index:
+    """Build an Index: ``backend`` picks the registry entry, ``initial``
+    (unique keys) and ``payloads`` seed a bulk build (empty when None),
+    remaining kwargs go to the backend's config (e.g. ``height=7`` or a
+    prebuilt ``cfg=...``)."""
+    spec = get_backend(backend)
+    cfg, state = spec.make(initial, payloads, **kwargs)
+    ix = Index(IndexSpec(backend=spec, cfg=cfg), state)
+    if payloads is not None and not ix.capability.map_mode:
+        raise ValueError(
+            f"backend {backend!r} with {ix.capability} stores no payloads; "
+            f"drop payloads= or configure map mode (e.g. payload_bits > 0)")
+    return ix

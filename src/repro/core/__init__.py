@@ -1,33 +1,28 @@
 """ΔTree core — the paper's contribution (dynamic vEB layout + concurrent
 search tree semantics), implemented as batched functional JAX.
 
-Public API:
-    TreeConfig, DeltaTree, empty, bulk_build,
-    search_batch, search_jit, update_batch,
-    OP_SEARCH, OP_INSERT, OP_DELETE,
-    layout (vEB math), live_keys (debug).
+``__all__`` below is the single source of truth for this package's surface
+(tests/test_exports.py asserts every name imports).  Types, constants and
+the ``layout`` submodule are stable; the free-function entry points are
+*deprecated shims* — the supported surface is the handle-based Index API:
+
+    from repro.api import make_index, OpBatch
+    ix = make_index("deltatree", initial=keys, height=7)
+
+Accessing a deprecated name still works (it resolves to
+``repro.core.deltatree``) but emits ``DeprecationWarning``.  Internal code
+imports ``repro.core.deltatree`` directly and never hits the shim.
 """
+
+import warnings
 
 from repro.core import layout
 from repro.core.deltatree import (
     OP_DELETE,
-    lookup_batch,
-    lookup_jit,
-    live_items,
     OP_INSERT,
     OP_SEARCH,
     DeltaTree,
     TreeConfig,
-    bulk_build,
-    empty,
-    live_keys,
-    search_batch,
-    search_one,
-    successor_jit,
-    successor_one,
-    search_jit,
-    update_batch,
-    update_batch_impl,
 )
 
 __all__ = [
@@ -51,3 +46,25 @@ __all__ = [
     "OP_INSERT",
     "OP_DELETE",
 ]
+
+# names not bound above resolve lazily through __getattr__ with a warning
+_DEPRECATED = sorted(set(__all__) - set(globals()))
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        warnings.warn(
+            f"repro.core.{name} is deprecated; use the Index API "
+            f"(repro.api.make_index('deltatree', ...)) or import "
+            f"repro.core.deltatree.{name} directly",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.core import deltatree
+
+        return getattr(deltatree, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

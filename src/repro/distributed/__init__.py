@@ -1,27 +1,22 @@
 """DeltaForest — key-range-sharded ΔTree subsystem (DESIGN.md §4).
 
-Public API (drop-in superset of `repro.core`):
-    ForestConfig, Forest, empty, bulk_build,
-    search_batch, lookup_batch, update_batch, successor_jit,
-    live_keys, live_items, alloc_failed, shard_tree,
-    splits (partitioner), router (batched cross-shard routing).
+``__all__`` is the single source of truth for this package's surface
+(tests/test_exports.py asserts every name imports).  Types and the
+``router`` / ``splits`` submodules are stable; the free-function entry
+points are *deprecated shims* for the handle-based Index API:
+
+    from repro.api import make_index
+    ix = make_index("forest", initial=keys, num_shards=4, height=7)
+
+Accessing a deprecated name still works (it resolves to
+``repro.distributed.forest``) but emits ``DeprecationWarning``.  Internal
+code imports ``repro.distributed.forest`` directly and never hits the shim.
 """
 
+import warnings
+
 from repro.distributed import router, splits
-from repro.distributed.forest import (
-    Forest,
-    ForestConfig,
-    alloc_failed,
-    bulk_build,
-    empty,
-    live_items,
-    live_keys,
-    lookup_batch,
-    search_batch,
-    shard_tree,
-    successor_jit,
-    update_batch,
-)
+from repro.distributed.forest import Forest, ForestConfig
 
 __all__ = [
     "Forest",
@@ -39,3 +34,24 @@ __all__ = [
     "successor_jit",
     "update_batch",
 ]
+
+_DEPRECATED = sorted(set(__all__) - set(globals()))
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        warnings.warn(
+            f"repro.distributed.{name} is deprecated; use the Index API "
+            f"(repro.api.make_index('forest', ...)) or import "
+            f"repro.distributed.forest.{name} directly",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.distributed import forest
+
+        return getattr(forest, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -22,7 +22,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import roofline as R

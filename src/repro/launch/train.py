@@ -1,6 +1,6 @@
 """End-to-end training driver (example-scale on CPU, production mesh on TPU).
 
-Features exercised here (DESIGN.md §5/§6):
+Features exercised here (DESIGN.md §6/§7):
 - sharded params (TP+FSDP rules) under a host mesh,
 - AdamW + cosine schedule + grad clip + grad accumulation,
 - deterministic-by-step data pipeline with prefetch,
@@ -16,13 +16,12 @@ from __future__ import annotations
 
 import argparse
 import signal
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.checkpoint import CheckpointManager, latest_step
 from repro.configs import get_config, get_smoke_config
@@ -30,7 +29,6 @@ from repro.data import DataConfig, Pipeline
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import api
 from repro.optim import AdamWConfig, adamw_init
-from repro.optim.compress import compressed_pmean
 from repro.parallel import shardings as SH
 from repro.parallel.ax import logical_rules
 from repro.train import make_train_step

@@ -12,7 +12,6 @@ against exactly these.
 
 from __future__ import annotations
 
-import dataclasses
 from types import SimpleNamespace
 
 import jax

@@ -18,7 +18,6 @@ are concatenated in front of the token embeddings.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ the decode cells and unit-tested against `decode_attention` on host devices.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

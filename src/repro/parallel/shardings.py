@@ -1,6 +1,6 @@
 """Parameter / cache / batch PartitionSpecs for the production mesh.
 
-Scheme (DESIGN.md §5): TP on "model" (heads / FFN hidden / experts / vocab),
+Scheme (DESIGN.md §6): TP on "model" (heads / FFN hidden / experts / vocab),
 FSDP on "data" for every large matrix (params replicated across "pod";
 cross-pod traffic is gradient-only), batch on ("pod","data").  Stacked
 scan params carry a leading (reps,) axis that is never sharded.
@@ -9,7 +9,6 @@ scan params carry a leading (reps,) axis that is never sharded.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 # name -> spec over the *trailing* dims (leading stack axes padded with None)

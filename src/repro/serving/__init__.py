@@ -1,4 +1,4 @@
-from repro.serving.pager import DeltaPager, PagerConfig
+from repro.serving.pager import DeltaPager, PagerConfig, make_pager
 from repro.serving.engine import ServeEngine
 from repro.serving.sharded_pager import ShardedDeltaPager, ShardedPagerConfig
 
@@ -8,4 +8,5 @@ __all__ = [
     "ServeEngine",
     "ShardedDeltaPager",
     "ShardedPagerConfig",
+    "make_pager",
 ]

@@ -31,8 +31,8 @@ from repro.models.layers.basic import (
 )
 from repro.models.layers.moe import moe_apply
 from repro.kernels.delta_paged_attention import paged_decode_attention
-from repro.serving.pager import DeltaPager, PagerConfig
-from repro.serving.sharded_pager import ShardedDeltaPager, ShardedPagerConfig
+from repro.api import Index
+from repro.serving.pager import DeltaPager, PagerConfig, make_pager
 
 
 @dataclasses.dataclass
@@ -46,16 +46,17 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, pager_cfg: PagerConfig,
-                 max_batch: int = 8):
+                 max_batch: int = 8, *, index: Index | None = None,
+                 pager: DeltaPager | None = None):
+        """``index`` may be any map-capable Index handle (deltatree, forest,
+        or a future backend) — the engine never branches on the backend;
+        ``pager`` injects a fully custom pager protocol."""
         assert cfg.family in ("dense", "moe", "vlm"), cfg.family
         assert not cfg.mla, "engine supports GQA caches"
         self.cfg = cfg
         self.params = params
-        # a ShardedPagerConfig fans the block-table index out over a
-        # DeltaForest (one ΔTree arena per key-range shard)
-        self.pager = (ShardedDeltaPager(pager_cfg)
-                      if isinstance(pager_cfg, ShardedPagerConfig)
-                      else DeltaPager(pager_cfg))
+        self.pager = pager if pager is not None else make_pager(pager_cfg, index)
+        pager_cfg = self.pager.cfg
         self.ps = pager_cfg.page_size
         self.max_batch = max_batch
         L, NP = cfg.num_layers, pager_cfg.num_pages

@@ -1,12 +1,18 @@
-"""ΔTree-backed KV-cache pager: the paper's structure on the serving hot path.
+"""Index-backed KV-cache pager: the paper's structure on the serving hot path.
 
-The (seq_id, logical_block) → physical_page mapping is a ΔTree in map mode
-(key = seq_id * max_blocks + block + 1; payload = page id).  Every decode
-step resolves block tables with a wait-free batched SEARCH; page allocation
-is a batched INSERT; sequence teardown is a batched DELETE (+ Merge keeps
-the index compact).  This is exactly the paper's claimed workload mix —
-search-dominant with occasional updates — so the serving benchmark doubles
-as a ΔTree macro-benchmark.
+The (seq_id, logical_block) → physical_page mapping is any map-capable
+``repro.api.Index`` (key = seq_id * max_blocks + block + 1; payload = page
+id).  Every decode step resolves block tables with a wait-free batched
+lookup; page allocation is a batched insert; sequence teardown is a batched
+delete (+ Merge keeps a ΔTree index compact).  This is exactly the paper's
+claimed workload mix — search-dominant with occasional updates — so the
+serving benchmark doubles as a ΔTree macro-benchmark.
+
+The default index is ``make_index("deltatree", cfg=cfg.tree_config)``;
+``ShardedDeltaPager`` defaults to the forest backend and band-interleaves
+the key encoding.  Any handle with ``Capability.map_mode`` can be injected
+via the ``index=`` argument — the pager protocol never touches backend
+internals.
 
 Requires 64-bit mode (packed int64 values): callers must run with
 JAX_ENABLE_X64=1 or `jax.config.update("jax_enable_x64", True)`.
@@ -19,14 +25,9 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    OP_DELETE,
-    OP_INSERT,
-    TreeConfig,
-    empty,
-    lookup_jit,
-    update_batch,
-)
+from repro.api import Index, OpBatch, make_index
+from repro.api.opbatch import OP_DELETE, OP_INSERT
+from repro.core.deltatree import TreeConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,43 +53,46 @@ class PagerConfig:
             payload_bits=self.payload_bits,
         )
 
+    def make_index(self) -> Index:
+        """Default index for this config (single-arena ΔTree, map mode)."""
+        return make_index("deltatree", cfg=self.tree_config)
+
 
 class DeltaPager:
-    """Host-driven pager; tree ops are jitted batched ΔTree steps.
+    """Host-driven pager over any map-capable Index handle.
 
-    The index is pluggable through four hooks (`_make_index`, `_key`,
-    `_lookup`, `_update`) — `ShardedDeltaPager` overrides them to swap the
-    single arena for a DeltaForest without touching the pager protocol.
+    The key encoding (`_key`) is the only other extension point —
+    `ShardedDeltaPager` overrides it (and the default index) to fan the
+    block-table index out over a DeltaForest without touching the pager
+    protocol.
     """
 
-    def __init__(self, cfg: PagerConfig):
+    def __init__(self, cfg: PagerConfig, index: Index | None = None):
         self.cfg = cfg
-        self._make_index()
+        self.index = index if index is not None else cfg.make_index()
+        assert self.index.capability.map_mode, (
+            f"pager needs a map-mode index, got {self.index!r} with "
+            f"{self.index.capability}")
         self.free_pages = list(range(cfg.num_pages - 1, -1, -1))
         self.seq_blocks: dict[int, int] = {}   # seq -> allocated blocks
         self.stats = {"searches": 0, "inserts": 0, "deletes": 0, "hops": 0}
 
-    # ---- index hooks (overridden by ShardedDeltaPager) ----
-    def _make_index(self) -> None:
-        self.tcfg = self.cfg.tree_config
-        self.tree = empty(self.tcfg)
-
+    # ---- key encoding (overridden by ShardedDeltaPager) ----
     def _key(self, seq_id, block) -> np.ndarray:
         return (np.asarray(seq_id, np.int64) * self.cfg.max_blocks
                 + np.asarray(block, np.int64) + 1).astype(np.int32)
 
+    # ---- index protocol ----
     def _lookup(self, keys: np.ndarray):
-        """(found, payload, hops) for a key batch (wait-free search)."""
-        return lookup_jit(self.tcfg, self.tree, jnp.asarray(keys))
+        """(found, payload, hops) for a key batch (wait-free lookup)."""
+        return self.index.lookup(jnp.asarray(keys))
 
     def _update(self, kinds: np.ndarray, keys: np.ndarray,
                 payloads: np.ndarray):
         """Apply a batched insert/delete step; returns per-op results."""
-        self.tree, res, _ = update_batch(
-            self.tcfg, self.tree, jnp.asarray(kinds), jnp.asarray(keys),
-            jnp.asarray(payloads),
-        )
-        assert not bool(self.tree.alloc_fail), "ΔTree arena exhausted"
+        self.index, res = self.index.insert_delete(
+            OpBatch.mixed(kinds, keys, payloads))
+        assert not self.index.alloc_failed(), "pager index arena exhausted"
         return res
 
     # ---- mutations ----
@@ -120,7 +124,7 @@ class DeltaPager:
 
     # ---- the decode-step hot path ----
     def block_tables(self, seq_ids, max_blocks: int) -> np.ndarray:
-        """(B, max_blocks) physical page table via wait-free ΔTree search."""
+        """(B, max_blocks) physical page table via wait-free Index lookup."""
         seq_ids = np.asarray(seq_ids)
         b = len(seq_ids)
         keys = self._key(
@@ -132,3 +136,14 @@ class DeltaPager:
         self.stats["hops"] += int(np.asarray(hops).sum())
         table = np.where(np.asarray(found), np.asarray(pages), -1)
         return table.reshape(b, max_blocks).astype(np.int32)
+
+
+def make_pager(cfg: PagerConfig, index: Index | None = None) -> DeltaPager:
+    """Pager for a config: ShardedPagerConfig gets the band-interleaved
+    ShardedDeltaPager, anything else the plain DeltaPager.  ``index``
+    overrides the config's default backend (any map-capable handle)."""
+    from repro.serving.sharded_pager import ShardedDeltaPager, ShardedPagerConfig
+
+    if isinstance(cfg, ShardedPagerConfig):
+        return ShardedDeltaPager(cfg, index)
+    return DeltaPager(cfg, index)

@@ -1,10 +1,10 @@
-"""Sharded ΔTree pager: the (seq_id, block) map fanned out over a DeltaForest.
+"""Sharded pager: the (seq_id, block) map fanned out over a DeltaForest.
 
 Same protocol as `DeltaPager` (allocate / free_seq / block_tables) — this is
-a subclass that swaps the index hooks, nothing else.  The serving engine
-assigns seq ids *sequentially*, so sharding their natural key encoding by
-range would pile every live sequence into shard 0; instead the key encoding
-band-interleaves sequences:
+a subclass that swaps the default Index backend and the key encoding,
+nothing else.  The serving engine assigns seq ids *sequentially*, so
+sharding their natural key encoding by range would pile every live sequence
+into shard 0; instead the key encoding band-interleaves sequences:
 
     shard  = seq_id mod S                    (round-robin across shards)
     key    = shard * band + (seq_id div S) * max_blocks + block + 1
@@ -22,16 +22,10 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed import (
-    ForestConfig,
-    alloc_failed,
-    empty,
-    lookup_batch,
-    update_batch,
-)
+from repro.api import Index, make_index
+from repro.distributed.forest import ForestConfig
 from repro.serving.pager import DeltaPager, PagerConfig
 
 
@@ -64,16 +58,15 @@ class ShardedPagerConfig(PagerConfig):
             key_max=self.num_shards * self.band,
         )
 
+    def make_index(self) -> Index:
+        # equi-width over [1, S*band] == the band boundaries by construction
+        return make_index("forest", cfg=self.forest_config)
+
 
 class ShardedDeltaPager(DeltaPager):
-    """Drop-in `DeltaPager` whose index is a DeltaForest."""
+    """Drop-in `DeltaPager` whose default index is a DeltaForest."""
 
     cfg: ShardedPagerConfig
-
-    def _make_index(self) -> None:
-        self.fcfg = self.cfg.forest_config
-        # equi-width over [1, S*band] == the band boundaries by construction
-        self.forest = empty(self.fcfg)
 
     def _key(self, seq_id, block) -> np.ndarray:
         seq_id = np.asarray(seq_id, np.int64)
@@ -85,15 +78,3 @@ class ShardedDeltaPager(DeltaPager):
         lane = seq_id // self.cfg.num_shards
         return (shard * self.cfg.band + lane * self.cfg.max_blocks
                 + np.asarray(block, np.int64) + 1).astype(np.int32)
-
-    def _lookup(self, keys: np.ndarray):
-        return lookup_batch(self.fcfg, self.forest, jnp.asarray(keys))
-
-    def _update(self, kinds: np.ndarray, keys: np.ndarray,
-                payloads: np.ndarray):
-        self.forest, res, _ = update_batch(
-            self.fcfg, self.forest, jnp.asarray(kinds), jnp.asarray(keys),
-            jnp.asarray(payloads),
-        )
-        assert not alloc_failed(self.forest), "ΔForest arena exhausted"
-        return res

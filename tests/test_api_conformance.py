@@ -1,0 +1,179 @@
+"""Backend conformance: one randomized op-trace, every registered backend.
+
+The same trace (snapshot searches + batch-order insert/delete + successor
+probes + live-set dumps) runs against each ``available_backends()`` entry
+through the uniform ``Index`` handle and is cross-checked step by step
+against ``core.oracle``.  Capability-gated surfaces (map mode, successor)
+skip where the backend declares no support; map mode additionally needs
+JAX_ENABLE_X64 (packed int64 values).  A subprocess leg replays the forest
+trace over 8 fake host devices (real shard_map dispatch).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    CapabilityError,
+    Index,
+    OpBatch,
+    available_backends,
+    make_index,
+)
+from repro.core.oracle import MapOracle, SetOracle
+from tests._subproc import run_py
+
+BACKENDS = available_backends()
+KEY_HI = 300
+
+# trace-scale construction kwargs per backend
+BUILD_KW = {
+    "deltatree": dict(height=4, max_dnodes=512, buf_cap=8),
+    "forest": dict(num_shards=3, height=4, max_dnodes=512, buf_cap=8,
+                   key_max=KEY_HI),
+    "sorted_array": dict(cap=4096),
+    "pointer_bst": dict(cap=4096),
+    "static_veb": {},
+}
+# backends with a payload_bits knob (map-mode capable); the rest are set-only
+MAP_BACKENDS = {"deltatree", "forest"}
+
+
+def _mk(backend: str, initial, payload_bits: int = 0, payloads=None) -> Index:
+    kw = dict(BUILD_KW[backend])
+    if payload_bits:
+        kw["payload_bits"] = payload_bits
+    return make_index(backend, initial=initial, payloads=payloads, **kw)
+
+
+def _check_successor(ix: Index, oracle_keys: list[int], rng) -> None:
+    q = rng.integers(1, KEY_HI + 5, size=16).astype(np.int32)
+    fs, sc = ix.successor(jnp.asarray(q))
+    for qi, fi, si in zip(q, np.asarray(fs), np.asarray(sc)):
+        exp = next((k for k in oracle_keys if k > qi), None)
+        assert bool(fi) == (exp is not None), (ix.backend, qi, fi, exp)
+        if exp is not None:
+            assert int(si) == exp, (ix.backend, qi, int(si), exp)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_set_trace_matches_oracle(backend):
+    rng = np.random.default_rng(11)
+    initial = np.unique(rng.integers(1, KEY_HI, 80).astype(np.int32))
+    ix = _mk(backend, initial)
+    oracle = SetOracle(initial)
+    for _ in range(8):
+        kinds = rng.integers(0, 3, size=24).astype(np.int32)
+        keys = rng.integers(1, KEY_HI, size=24).astype(np.int32)
+        # wait-free searches observe the pre-step snapshot
+        f, _ = ix.search(jnp.asarray(keys))
+        np.testing.assert_array_equal(
+            np.asarray(f), oracle.snapshot_search(keys))
+        # updates apply in batch order; OP_SEARCH rows are no-ops
+        ix, res = ix.insert_delete(OpBatch.mixed(kinds, keys))
+        np.testing.assert_array_equal(
+            np.asarray(res), oracle.apply_updates(kinds, keys))
+        assert not ix.alloc_failed()
+        assert ix.size() == len(oracle.s)
+        assert [k for k, _ in ix.live_items()] == sorted(oracle.s)
+        if ix.capability.successor:
+            _check_successor(ix, sorted(oracle.s), rng)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_map_trace_matches_oracle(backend):
+    if backend not in MAP_BACKENDS:
+        # declared set-only: the factory must reject payloads and the
+        # handle must refuse map-mode reads
+        with pytest.raises(ValueError, match="payload"):
+            _mk(backend, np.asarray([5], np.int32),
+                payloads=np.asarray([1], np.int32))
+        ix = _mk(backend, np.asarray([5, 9], np.int32))
+        assert not ix.capability.map_mode
+        with pytest.raises(CapabilityError):
+            ix.lookup(jnp.asarray([5], jnp.int32))
+        return
+    if not jax.config.jax_enable_x64:
+        pytest.skip("map mode packs int64 values; needs JAX_ENABLE_X64")
+    bits = 6
+    rng = np.random.default_rng(12)
+    initial = np.unique(rng.integers(1, KEY_HI, 60).astype(np.int32))
+    pays = rng.integers(0, 2**bits, size=initial.size).astype(np.int32)
+    ix = _mk(backend, initial, payload_bits=bits, payloads=pays)
+    assert ix.capability.map_mode
+    oracle = MapOracle(zip(initial, pays))
+    for _ in range(6):
+        kinds = rng.integers(0, 3, size=20).astype(np.int32)
+        keys = rng.integers(1, KEY_HI, size=20).astype(np.int32)
+        vals = rng.integers(0, 2**bits, size=20).astype(np.int32)
+        f, p, _ = ix.lookup(jnp.asarray(keys))
+        ef, ep = oracle.snapshot_lookup(keys)
+        np.testing.assert_array_equal(np.asarray(f), ef)
+        np.testing.assert_array_equal(np.asarray(p)[ef], ep[ef])
+        ix, res = ix.insert_delete(OpBatch.mixed(kinds, keys, vals))
+        np.testing.assert_array_equal(
+            np.asarray(res), oracle.apply_updates(kinds, keys, vals))
+        assert ix.live_items() == oracle.items()
+
+
+@pytest.mark.parametrize("backend", [b for b in BACKENDS
+                                     if b not in ("deltatree", "forest")])
+def test_successor_capability_gate(backend):
+    ix = _mk(backend, np.asarray([5, 9], np.int32))
+    if ix.capability.successor:
+        fs, sc = ix.successor(jnp.asarray([6], jnp.int32))
+        assert bool(fs[0]) and int(sc[0]) == 9
+    else:
+        with pytest.raises(CapabilityError):
+            ix.successor(jnp.asarray([6], jnp.int32))
+
+
+def test_index_and_opbatch_flow_through_jit():
+    """The handle is a pytree (state dynamic, spec static): a jitted step
+    can consume and return Index + OpBatch without host round-trips."""
+    ix = make_index("deltatree", height=4, max_dnodes=64, buf_cap=8)
+
+    @jax.jit
+    def step(ix: Index, batch: OpBatch):
+        ix2, res = ix.insert_delete(batch)
+        found, _ = ix2.search(batch.keys)
+        return ix2, res, found
+
+    ix2, res, found = step(ix, OpBatch.inserts([5, 9, 40]))
+    assert isinstance(ix2, Index) and ix2.spec is ix.spec
+    assert np.asarray(res).all() and np.asarray(found).all()
+    ix3, res2, found2 = step(ix2, OpBatch.deletes([9, 7, 9]))
+    np.testing.assert_array_equal(np.asarray(res2), [True, False, False])
+    assert [k for k, _ in ix3.live_items()] == [5, 40]
+
+
+def test_make_index_unknown_backend():
+    with pytest.raises(KeyError, match="registered"):
+        make_index("btree_of_dreams")
+
+
+def test_forest_conformance_8dev_subprocess():
+    """The same set trace passes with the forest backend fanned out over 8
+    fake host devices (true shard_map dispatch, CI matrix leg)."""
+    out = run_py("""
+import numpy as np, jax.numpy as jnp
+from repro.api import make_index, OpBatch
+from repro.core.oracle import SetOracle
+
+rng = np.random.default_rng(13)
+initial = np.unique(rng.integers(1, 400, 120).astype(np.int32))
+ix = make_index("forest", initial=initial, num_shards=8, height=4,
+                max_dnodes=256, buf_cap=8, key_max=400)
+oracle = SetOracle(initial)
+for _ in range(5):
+    kinds = rng.integers(0, 3, size=32).astype(np.int32)
+    keys = rng.integers(1, 400, size=32).astype(np.int32)
+    f, _ = ix.search(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(f), oracle.snapshot_search(keys))
+    ix, res = ix.insert_delete(OpBatch.mixed(kinds, keys))
+    np.testing.assert_array_equal(np.asarray(res), oracle.apply_updates(kinds, keys))
+assert [k for k, _ in ix.live_items()] == sorted(oracle.s)
+print("FOREST 8DEV OK")
+""", devices=8)
+    assert "FOREST 8DEV OK" in out

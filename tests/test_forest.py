@@ -7,10 +7,8 @@ host devices and the x64 map-mode / sharded-pager paths.
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core import TreeConfig, live_keys as core_live_keys
-from repro.core import bulk_build as core_bulk_build
 from repro.core import empty as core_empty
 from repro.core import search_jit, successor_jit as core_successor
 from repro.core import update_batch as core_update

@@ -8,9 +8,13 @@ Maps the paper's experiment protocol (§5) to the batched-SPMD world:
 - performance = ops/second over `total_ops` with the jit warm.
 
 Every structure runs through the same ``make_index`` factory — a benchmark
-names a backend string, never a concrete engine.  All RNGs derive from one
-``--seed`` flag (``add_common_args``), and every emitted JSON row records
-``seed`` + ``backend`` so perf rows are reproducible.
+names a backend string plus a SearchEngine name, never a concrete
+implementation.  All RNGs derive from one ``--seed`` flag
+(``add_common_args``), and every emitted JSON row records ``seed`` +
+``backend`` + ``engine`` so perf rows are reproducible.  ``--engine``
+narrows the read path (``scalar`` reference walk vs ``lockstep`` Pallas
+vEB walk); backends that don't support the requested engine are skipped
+with an explicit row rather than silently falling back.
 """
 
 from __future__ import annotations
@@ -22,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import OpBatch, make_index
+from repro.api import OpBatch, make_index, supported_engines
 
 DEFAULT_SEED = 0
 
@@ -34,12 +38,21 @@ UPDATE_CHUNK = 64
 
 
 def add_common_args(ap) -> None:
-    """--seed / --backend flags shared by every benchmark CLI."""
+    """--seed / --backend / --engine flags shared by every benchmark CLI."""
     ap.add_argument("--seed", type=int, default=DEFAULT_SEED,
                     help="root seed for every RNG (recorded in JSON rows)")
     ap.add_argument("--backend", default=None,
                     help="run only this registered Index backend "
                          "(default: the benchmark's historical set)")
+    ap.add_argument("--engine", default=None,
+                    help="read-path SearchEngine (scalar|lockstep; default "
+                         "scalar). Recorded in every JSON row; backends "
+                         "without the engine are skipped explicitly")
+
+
+def engine_supported(backend: str, engine: str | None) -> bool:
+    """True when ``backend`` can run its reads under ``engine``."""
+    return engine is None or engine in supported_engines(backend)
 
 
 def emit(row: dict) -> dict:
@@ -89,9 +102,13 @@ def _chunk_updates(kinds: np.ndarray, keys: np.ndarray,
 
 def run_index(backend: str, initial: np.ndarray, key_hi: int,
               update_pct: float, batch: int, total_ops: int,
-              seed: int = DEFAULT_SEED, **make_kw) -> dict:
-    """Timed mixed workload against one backend through the Index handle."""
-    ix = make_index(backend, initial=initial, **make_kw)
+              seed: int = DEFAULT_SEED, engine: str | None = None,
+              **make_kw) -> dict:
+    """Timed mixed workload against one backend through the Index handle.
+
+    ``engine`` selects the read-path SearchEngine (validated by
+    ``make_index``; None = the backend default, "scalar")."""
+    ix = make_index(backend, initial=initial, engine=engine, **make_kw)
     rng = np.random.default_rng(seed)
     chunked = backend in CHUNKED_BACKENDS
     any_update = update_pct > 0
@@ -135,7 +152,8 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
         [x for x in jax.tree.leaves(ix.state) if hasattr(x, "block_until_ready")])
     found.block_until_ready()
     dt = time.perf_counter() - t0
-    return {"backend": backend, "seed": seed, "update_pct": update_pct,
-            "batch": batch, "ops_per_s": round((n_search + n_update) / dt, 1),
+    return {"backend": backend, "engine": ix.engine, "seed": seed,
+            "update_pct": update_pct, "batch": batch,
+            "ops_per_s": round((n_search + n_update) / dt, 1),
             "seconds": round(dt, 4), "n_search": n_search,
             "n_update": n_update}

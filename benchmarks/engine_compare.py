@@ -1,0 +1,73 @@
+"""SearchEngine comparison: scalar (vmap-of-while_loop reference) vs
+lockstep (frontier rounds driving the Pallas vEB walk kernel) on the same
+search-dominant workload — the paper's headline read path, now tracked per
+engine so the perf trajectory of the lockstep path is visible run over run.
+
+For every engine-capable backend (``deltatree``, ``forest``) and batch
+width, the identical seeded workload runs through ``run_index`` once per
+engine; each per-engine JSON row records ``engine``, and the lockstep row
+additionally records ``speedup_vs_scalar``.  On CPU the lockstep engine
+pays the Pallas interpreter tax — the row pair still pins down result
+parity cost; on TPU (compiled kernel, one contiguous row DMA per query per
+round) the same rows measure the paper's locality claim.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import (
+    DEFAULT_SEED, add_common_args, backend_kwargs, emit, engine_supported,
+    run_index,
+)
+
+KEY_MAX = 2_000_000
+ENGINES = ("scalar", "lockstep")
+DEFAULT_BACKENDS = ("deltatree", "forest")
+
+
+def run(initial_size: int, total_ops: int, batches, update_pct: float,
+        seed: int = DEFAULT_SEED, backend: str | None = None):
+    rng = np.random.default_rng(seed)
+    vals = np.unique(rng.integers(1, KEY_MAX, size=initial_size)
+                     .astype(np.int32))
+    rows = []
+    names = (backend,) if backend else DEFAULT_BACKENDS
+    for name in names:
+        if not engine_supported(name, "lockstep"):
+            rows.append(emit({"bench": "engine_compare", "backend": name,
+                              "skipped": "no lockstep engine"}))
+            continue
+        kw = backend_kwargs(name, vals.size, key_max=KEY_MAX,
+                            total_ops=total_ops)
+        for batch in batches:
+            per_engine = {}
+            for eng in ENGINES:
+                r = run_index(name, vals, KEY_MAX, update_pct, batch,
+                              total_ops, seed=seed, engine=eng, **kw)
+                per_engine[eng] = r
+                row = {"bench": "engine_compare", **r}
+                if eng == "lockstep":
+                    row["speedup_vs_scalar"] = round(
+                        r["ops_per_s"] / per_engine["scalar"]["ops_per_s"], 3)
+                rows.append(emit(row))
+    return rows
+
+
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
+    del engine  # this benchmark sweeps both engines by construction
+    if quick:
+        return run(initial_size=20_000, total_ops=2_000, batches=(256,),
+                   update_pct=2.0, seed=seed, backend=backend)
+    return run(initial_size=200_000, total_ops=20_000, batches=(256, 1024),
+               update_pct=2.0, seed=seed, backend=backend)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    add_common_args(ap)
+    args = ap.parse_args()
+    main(quick=not args.full, seed=args.seed, backend=args.backend)

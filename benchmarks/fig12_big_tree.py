@@ -9,7 +9,8 @@ import argparse
 import numpy as np
 
 from benchmarks.common import (
-    DEFAULT_SEED, add_common_args, backend_kwargs, emit, run_index,
+    DEFAULT_SEED, add_common_args, backend_kwargs, emit, engine_supported,
+    run_index,
 )
 
 KEY_MAX = 5_000_000
@@ -21,21 +22,28 @@ DEFAULT_BACKENDS = ("deltatree", "pointer_bst", "sorted_array", "static_veb")
 
 def run(total_ops: int = 30_000, quick: bool = False,
         initial_size: int | None = None, seed: int = DEFAULT_SEED,
-        backend: str | None = None):
+        backend: str | None = None, engine: str | None = None):
     rng = np.random.default_rng(seed)
     n = initial_size or (200_000 if quick else INITIAL)
     initial = np.unique(rng.integers(1, KEY_MAX, size=n).astype(np.int32))
     rows = []
     rates = (0, 10) if quick else UPDATE_RATES
     concs = (1024,) if quick else CONCURRENCY
-    names = (backend,) if backend else DEFAULT_BACKENDS
+    names = []
+    for name in ((backend,) if backend else DEFAULT_BACKENDS):
+        if engine_supported(name, engine):
+            names.append(name)
+        else:  # one skip row per backend, not per (u, c) point
+            rows.append(emit({"bench": "fig12", "backend": name,
+                              "engine": engine,
+                              "skipped": "engine unsupported"}))
     for u in rates:
         for c in concs:
             for name in names:
                 if name == "static_veb" and u > 0 and backend is None:
                     continue
                 r = run_index(name, initial, KEY_MAX, u, c, total_ops,
-                              seed=seed,
+                              seed=seed, engine=engine,
                               **backend_kwargs(name, initial.size,
                                                key_max=KEY_MAX,
                                                total_ops=total_ops))
@@ -43,8 +51,8 @@ def run(total_ops: int = 30_000, quick: bool = False,
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None):
-    return run(quick=quick, seed=seed, backend=backend)
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
+    return run(quick=quick, seed=seed, backend=backend, engine=engine)
 
 
 if __name__ == "__main__":
@@ -52,4 +60,5 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     add_common_args(ap)
     args = ap.parse_args()
-    main(quick=not args.full, seed=args.seed, backend=args.backend)
+    main(quick=not args.full, seed=args.seed, backend=args.backend,
+         engine=args.engine)

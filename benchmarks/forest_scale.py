@@ -29,7 +29,8 @@ KEY_MAX = 2_000_000
 
 
 def run(shard_counts, batches, initial_size: int, total_ops: int,
-        update_pct: float, height: int = 7, seed: int = DEFAULT_SEED):
+        update_pct: float, height: int = 7, seed: int = DEFAULT_SEED,
+        engine: str | None = None):
     import jax
 
     rng = np.random.default_rng(seed)
@@ -38,13 +39,13 @@ def run(shard_counts, batches, initial_size: int, total_ops: int,
     rows = []
     for batch in batches:
         base = run_index("deltatree", vals, KEY_MAX, update_pct, batch,
-                         total_ops, seed=seed,
+                         total_ops, seed=seed, engine=engine,
                          **backend_kwargs("deltatree", vals.size,
                                           key_max=KEY_MAX, height=height,
                                           total_ops=total_ops))
         for shards in shard_counts:
             perf = run_index("forest", vals, KEY_MAX, update_pct, batch,
-                             total_ops, seed=seed,
+                             total_ops, seed=seed, engine=engine,
                              **backend_kwargs("forest", vals.size,
                                               key_max=KEY_MAX, height=height,
                                               num_shards=shards,
@@ -54,6 +55,7 @@ def run(shard_counts, batches, initial_size: int, total_ops: int,
                 "shards": shards,
                 "batch": batch,
                 "seed": seed,
+                "engine": perf["engine"],
                 "devices": jax.device_count(),
                 "update_pct": update_pct,
                 "initial_keys": int(vals.size),
@@ -64,15 +66,15 @@ def run(shard_counts, batches, initial_size: int, total_ops: int,
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None):
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
     del backend  # this sweep is forest-vs-deltatree by construction
     if quick:
         return run(shard_counts=(1, 2, 4), batches=(256, 1024),
                    initial_size=50_000, total_ops=8_000, update_pct=5.0,
-                   seed=seed)
+                   seed=seed, engine=engine)
     return run(shard_counts=(1, 2, 4, 8), batches=(256, 1024, 4096),
                initial_size=500_000, total_ops=100_000, update_pct=5.0,
-               seed=seed)
+               seed=seed, engine=engine)
 
 
 if __name__ == "__main__":
@@ -80,4 +82,4 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     add_common_args(ap)
     args = ap.parse_args()
-    main(quick=not args.full, seed=args.seed)
+    main(quick=not args.full, seed=args.seed, engine=args.engine)

@@ -13,13 +13,14 @@ import sys
 
 
 def _in_x64_subprocess(module: str, quick: bool, seed: int,
-                       backend: str | None):
+                       backend: str | None, engine: str | None):
     """serve bench needs JAX_ENABLE_X64; run isolated."""
     env = dict(os.environ)
     env["JAX_ENABLE_X64"] = "1"
     env.setdefault("PYTHONPATH", "src")
     code = (f"from {module} import main; "
-            f"main(quick={quick}, seed={seed}, backend={backend!r})")
+            f"main(quick={quick}, seed={seed}, backend={backend!r}, "
+            f"engine={engine!r})")
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True)
     sys.stdout.write(out.stdout)
@@ -35,29 +36,35 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="fig11|fig12|table1|ub_sweep|serve|forest")
+                    help="fig11|fig12|table1|ub_sweep|serve|forest|engines")
     add_common_args(ap)
     args, _ = ap.parse_known_args()
     quick = not args.full
-    seed, backend = args.seed, args.backend
+    seed, backend, engine = args.seed, args.backend, args.engine
 
-    from benchmarks import fig11_small_tree, fig12_big_tree, table1_transfers
-    from benchmarks import forest_scale, ub_sweep
+    from benchmarks import engine_compare, fig11_small_tree, fig12_big_tree
+    from benchmarks import forest_scale, table1_transfers, ub_sweep
 
     todo = args.only.split(",") if args.only else [
-        "table1", "ub_sweep", "fig11", "fig12", "serve", "forest"]
+        "table1", "ub_sweep", "fig11", "fig12", "serve", "forest", "engines"]
     if "table1" in todo:
-        table1_transfers.main(quick=quick, seed=seed, backend=backend)
+        table1_transfers.main(quick=quick, seed=seed, backend=backend,
+                              engine=engine)
     if "ub_sweep" in todo:
-        ub_sweep.main(quick=quick, seed=seed, backend=backend)
+        ub_sweep.main(quick=quick, seed=seed, backend=backend, engine=engine)
     if "fig11" in todo:
-        fig11_small_tree.main(quick=quick, seed=seed, backend=backend)
+        fig11_small_tree.main(quick=quick, seed=seed, backend=backend,
+                              engine=engine)
     if "fig12" in todo:
-        fig12_big_tree.main(quick=quick, seed=seed, backend=backend)
+        fig12_big_tree.main(quick=quick, seed=seed, backend=backend,
+                            engine=engine)
     if "serve" in todo:
-        _in_x64_subprocess("benchmarks.serve_paged", quick, seed, backend)
+        _in_x64_subprocess("benchmarks.serve_paged", quick, seed, backend,
+                           engine)
     if "forest" in todo:
-        forest_scale.main(quick=quick, seed=seed)
+        forest_scale.main(quick=quick, seed=seed, engine=engine)
+    if "engines" in todo:
+        engine_compare.main(quick=quick, seed=seed, backend=backend)
 
 
 if __name__ == '__main__':

@@ -19,7 +19,7 @@ from benchmarks.common import DEFAULT_SEED, add_common_args, emit
 
 
 def run(steps: int = 10, seed: int = DEFAULT_SEED,
-        backend: str | None = None):
+        backend: str | None = None, engine: str | None = None):
     import jax
     import jax.numpy as jnp
     from repro.configs import get_smoke_config
@@ -37,7 +37,7 @@ def run(steps: int = 10, seed: int = DEFAULT_SEED,
     params = m.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(seed)
     pager_kw = dict(num_pages=256, page_size=8, max_seqs=32, max_blocks=128,
-                    tree_height=5)
+                    tree_height=5, engine=engine or "scalar")
     if backend == "forest":
         pc = ShardedPagerConfig(num_shards=4, **pager_kw)
     else:
@@ -67,15 +67,17 @@ def run(steps: int = 10, seed: int = DEFAULT_SEED,
     jax.block_until_ready(lg)
     dense = (time.perf_counter() - t0) / steps
     s = eng.pager.stats
-    return {"bench": "serve_paged", "backend": backend, "seed": seed,
+    return {"bench": "serve_paged", "backend": backend,
+            "engine": eng.pager.index.engine, "seed": seed,
             "paged_step_us": round(dt * 1e6), "dense_step_us": round(dense * 1e6),
             "pager_searches": s["searches"], "pager_inserts": s["inserts"],
             "pager_deletes": s["deletes"],
             "hops_per_search": round(s["hops"] / max(s["searches"], 1), 2)}
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None):
-    return emit(run(steps=5 if quick else 20, seed=seed, backend=backend))
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
+    return emit(run(steps=5 if quick else 20, seed=seed, backend=backend,
+                    engine=engine))
 
 
 if __name__ == "__main__":
@@ -83,4 +85,5 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     add_common_args(ap)
     args = ap.parse_args()
-    main(quick=not args.full, seed=args.seed, backend=args.backend)
+    main(quick=not args.full, seed=args.seed, backend=args.backend,
+         engine=args.engine)

@@ -17,7 +17,9 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import DEFAULT_SEED, add_common_args, emit
+from benchmarks.common import (
+    DEFAULT_SEED, add_common_args, emit, engine_supported,
+)
 from repro.api import get_backend, make_index
 from repro.core.baselines import count_block_transfers
 
@@ -33,14 +35,20 @@ def _mean_loads(touch_fn, keys) -> float:
 def _profile(label: str, ix, q, seed: int) -> dict:
     tf = ix.touch_fn()
     assert tf is not None, f"backend {ix.backend!r} exposes no touch trace"
-    return {"bench": "table1", "backend": label, "seed": seed,
+    return {"bench": "table1", "backend": label, "engine": ix.engine,
+            "seed": seed,
             "loads": round(_mean_loads(tf, q), 2),
             "blocks_b16": round(count_block_transfers(tf, q, 16), 2),
             "blocks_b128": round(count_block_transfers(tf, q, 128), 2)}
 
 
 def run(n_queries: int = 300, initial_size: int = INITIAL,
-        seed: int = DEFAULT_SEED, backend: str | None = None):
+        seed: int = DEFAULT_SEED, backend: str | None = None,
+        engine: str | None = None):
+    # the ideal-cache touch model is engine-independent (it replays the
+    # walk host-side — both engines make exactly these transfers per
+    # search), but ``engine`` is still validated + applied via make_index
+    # so each row's "engine" field reports what the handle actually runs
     rng = np.random.default_rng(seed)
     vals = np.unique(rng.integers(1, KEY_MAX, size=initial_size)
                      .astype(np.int32))
@@ -53,25 +61,31 @@ def run(n_queries: int = 300, initial_size: int = INITIAL,
             rows.append(emit({"bench": "table1", "backend": name,
                               "skipped": "backend exposes no touch trace"}))
             continue
+        if not engine_supported(name, engine):
+            rows.append(emit({"bench": "table1", "backend": name,
+                              "engine": engine,
+                              "skipped": "engine unsupported"}))
+            continue
         kw = {}
         if name == "deltatree":
             kw = dict(height=7, max_dnodes=1 << 17, buf_cap=16)
         rows.append(emit(_profile(
-            name, make_index(name, initial=vals, **kw), q, seed)))
+            name, make_index(name, initial=vals, engine=engine, **kw),
+            q, seed)))
     if backend is None:
         # ΔTree UB=N: one ΔNode covering everything = leaf-oriented static vEB
         h_big = int(np.ceil(np.log2(vals.size))) + 2
         ix_big = make_index("deltatree", initial=vals, height=h_big,
-                            max_dnodes=4, buf_cap=16)
+                            max_dnodes=4, buf_cap=16, engine=engine)
         rows.append(emit(_profile(
             f"deltatree_ubN(h={h_big})", ix_big, q, seed)))
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None):
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
     return run(n_queries=150 if quick else 500,
                initial_size=(1 << 17) if quick else INITIAL,
-               seed=seed, backend=backend)
+               seed=seed, backend=backend, engine=engine)
 
 
 if __name__ == "__main__":
@@ -79,4 +93,5 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     add_common_args(ap)
     args = ap.parse_args()
-    main(quick=not args.full, seed=args.seed, backend=args.backend)
+    main(quick=not args.full, seed=args.seed, backend=args.backend,
+         engine=args.engine)

@@ -22,7 +22,7 @@ HEIGHTS = (5, 7, 10, 13)      # UB = 31, 127, 1023, 8191
 
 def run(initial_size: int = 200_000, total_ops: int = 20_000,
         update_pct: float = 5.0, seed: int = DEFAULT_SEED,
-        backend: str | None = None):
+        backend: str | None = None, engine: str | None = None):
     backend = backend or "deltatree"
     if backend not in ("deltatree", "forest"):
         # ΔNode height is meaningless for flat structures — note and skip
@@ -45,15 +45,15 @@ def run(initial_size: int = 200_000, total_ops: int = 20_000,
             row["blocks_b128"] = round(
                 count_block_transfers(ix.touch_fn(), q, 128), 2)
         perf = run_index(backend, vals, KEY_MAX, update_pct, 1024, total_ops,
-                         seed=seed, **kw)
+                         seed=seed, engine=engine, **kw)
         rows.append(emit({**row, **perf}))
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None):
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
     return run(initial_size=100_000 if quick else 500_000,
                total_ops=10_000 if quick else 50_000,
-               seed=seed, backend=backend)
+               seed=seed, backend=backend, engine=engine)
 
 
 if __name__ == "__main__":
@@ -61,4 +61,5 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     add_common_args(ap)
     args = ap.parse_args()
-    main(quick=not args.full, seed=args.seed, backend=args.backend)
+    main(quick=not args.full, seed=args.seed, backend=args.backend,
+         engine=args.engine)

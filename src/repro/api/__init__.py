@@ -26,6 +26,7 @@ from repro.api.registry import (
     get_backend,
     make_index,
     register_backend,
+    supported_engines,
 )
 from repro.api import backends as _backends  # noqa: F401  (registers built-ins)
 
@@ -43,4 +44,5 @@ __all__ = [
     "get_backend",
     "make_index",
     "register_backend",
+    "supported_engines",
 ]

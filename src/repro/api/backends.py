@@ -74,6 +74,7 @@ register_backend(BackendSpec(
     size=_dt_size,
     touch=TR.delta_touch_fn,
     alloc_failed=lambda cfg, t: bool(t.alloc_fail),
+    engines=("*",),   # reads dispatch on cfg.engine: any registered engine
 ))
 
 
@@ -85,10 +86,19 @@ register_backend(BackendSpec(
 def _forest_make(initial, payloads, cfg=None, splits=None, **kw):
     if cfg is None:
         tree_kw = {k: kw.pop(k) for k in list(kw) if k in _TREE_FIELDS}
-        tree = kw.pop("tree", None) or TreeConfig(**tree_kw)
+        tree = kw.pop("tree", None)
+        tree = (dataclasses.replace(tree, **tree_kw) if tree is not None
+                else TreeConfig(**tree_kw))
         cfg = ForestConfig(tree=tree, **kw)
-    elif kw:
-        cfg = dataclasses.replace(cfg, **kw)
+    else:
+        # TreeConfig knobs (notably ``engine``) land on cfg.tree, the rest
+        # on the ForestConfig itself
+        tree_kw = {k: kw.pop(k) for k in list(kw) if k in _TREE_FIELDS}
+        if tree_kw:
+            cfg = dataclasses.replace(
+                cfg, tree=dataclasses.replace(cfg.tree, **tree_kw))
+        if kw:
+            cfg = dataclasses.replace(cfg, **kw)
     if initial is None:
         return cfg, F.empty(cfg, splits)
     return cfg, F.bulk_build(cfg, np.asarray(initial), payloads, splits)
@@ -117,6 +127,7 @@ register_backend(BackendSpec(
     live_items=F.live_items,
     size=_forest_size,
     alloc_failed=lambda cfg, f: F.alloc_failed(f),
+    engines=("*",),   # per-shard reads dispatch on cfg.tree.engine
 ))
 
 

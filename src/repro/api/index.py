@@ -49,6 +49,16 @@ class BackendSpec:
     ``capability(cfg)``: ``lookup`` (map_mode), ``successor``.  ``touch``
     (ideal-cache touch traces, Table 1) and ``alloc_failed`` (sticky
     arena-exhaustion flag) are optional diagnostics.
+
+    ``engines`` lists the SearchEngine names the backend's read path can
+    run under.  The special entry ``"*"`` means the backend dispatches
+    reads through the ``repro.core.engine`` registry and accepts every
+    engine registered there *at selection time* (so engines registered
+    after import are selectable) — the ΔTree-core backends declare this.
+    Single-read-path backends keep the default ``("scalar",)`` and
+    ``make_index(..., engine=)`` rejects anything else; a backend with
+    its own private engines declares them literally.  Resolve with
+    ``repro.api.supported_engines``.
     """
 
     name: str
@@ -62,6 +72,7 @@ class BackendSpec:
     successor: Callable[..., Any] | None = None  # (cfg, state, keys) -> (found, succ)
     touch: Callable[..., Any] | None = None     # (cfg, state) -> (key -> [flat indices])
     alloc_failed: Callable[..., bool] | None = None  # (cfg, state) -> bool
+    engines: tuple[str, ...] = ("scalar",)      # selectable read engines
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +113,15 @@ class Index:
     @property
     def capability(self) -> Capability:
         return self.spec.backend.capability(self.spec.cfg)
+
+    @property
+    def engine(self) -> str:
+        """Active SearchEngine name ("scalar" for single-engine backends)."""
+        cfg = self.spec.cfg
+        eng = getattr(cfg, "engine", None)
+        if eng is None:
+            eng = getattr(getattr(cfg, "tree", None), "engine", None)
+        return eng or "scalar"
 
     def _require(self, flag: str, hook) -> None:
         if not getattr(self.capability, flag) or hook is None:

@@ -36,15 +36,50 @@ def available_backends() -> list[str]:
     return sorted(_REGISTRY)
 
 
+def supported_engines(backend: str) -> tuple[str, ...]:
+    """Live SearchEngine names ``backend`` accepts via ``engine=``.
+
+    A declared ``"*"`` entry expands to the ``repro.core.engine`` registry
+    *at call time* (engines registered after import are selectable);
+    literal names pass through unchanged, so a backend with a private
+    read path is pinned to exactly what it declared."""
+    spec = get_backend(backend)
+    if "*" not in spec.engines:
+        return spec.engines
+    from repro.core.engine import available_engines
+
+    literal = [e for e in spec.engines if e != "*"]
+    return tuple(dict.fromkeys(literal + available_engines()))
+
+
 def make_index(backend: str = "deltatree", *, initial=None, payloads=None,
-               **kwargs) -> Index:
+               engine: str | None = None, **kwargs) -> Index:
     """Build an Index: ``backend`` picks the registry entry, ``initial``
     (unique keys) and ``payloads`` seed a bulk build (empty when None),
-    remaining kwargs go to the backend's config (e.g. ``height=7`` or a
-    prebuilt ``cfg=...``)."""
+    ``engine`` selects the read-path SearchEngine ("scalar" / "lockstep";
+    validated against the backend's declared ``engines``), remaining
+    kwargs go to the backend's config (e.g. ``height=7`` or a prebuilt
+    ``cfg=...``)."""
     spec = get_backend(backend)
+    if engine is not None:
+        engines = supported_engines(backend)
+        if engine not in engines:
+            raise ValueError(
+                f"backend {backend!r} supports engines {engines}, "
+                f"not {engine!r}")
+        if spec.engines != ("scalar",):
+            # engine-aware backends thread the name into their TreeConfig;
+            # single-engine backends just validated the default above
+            kwargs["engine"] = engine
     cfg, state = spec.make(initial, payloads, **kwargs)
     ix = Index(IndexSpec(backend=spec, cfg=cfg), state)
+    if ix.engine not in supported_engines(backend):
+        # catches engine typos smuggled in via a prebuilt cfg= (e.g.
+        # TreeConfig(engine=...) / PagerConfig.engine) at construction
+        # time instead of as a KeyError at the first read
+        raise ValueError(
+            f"backend {backend!r} config names engine {ix.engine!r}; "
+            f"supported: {supported_engines(backend)}")
     if payloads is not None and not ix.capability.map_mode:
         raise ValueError(
             f"backend {backend!r} with {ix.capability} stores no payloads; "

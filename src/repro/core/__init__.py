@@ -24,9 +24,21 @@ from repro.core.deltatree import (
     DeltaTree,
     TreeConfig,
 )
+from repro.core import engine
+from repro.core.engine import (
+    SearchEngine,
+    available_engines,
+    get_engine,
+    register_engine,
+)
 
 __all__ = [
     "layout",
+    "engine",
+    "SearchEngine",
+    "available_engines",
+    "get_engine",
+    "register_engine",
     "TreeConfig",
     "DeltaTree",
     "empty",
@@ -34,6 +46,7 @@ __all__ = [
     "live_keys",
     "search_batch",
     "search_one",
+    "successor_batch",
     "successor_jit",
     "successor_one",
     "lookup_batch",

@@ -71,6 +71,10 @@ class TreeConfig:
     max_rounds:   safety bound on maintenance rounds per step.
     payload_bits: 0 = paper set semantics (int32); >0 = key→payload map
                   (int64 packed values, payload in the low bits).
+    engine:       which registered SearchEngine serves the read path —
+                  "scalar" (vmap-of-while_loop reference) or "lockstep"
+                  (Pallas vEB walk kernel in frontier rounds); see
+                  ``repro.core.engine``.
     """
 
     height: int = 7           # UB = 127, the paper's best (page-sized) ΔNode
@@ -79,6 +83,7 @@ class TreeConfig:
     max_rounds: int = 64
     payload_bits: int = 0
     parallel_updates: bool = True   # vectorized non-conflicting fast path
+    engine: str = "scalar"    # read-path SearchEngine (core.engine registry)
 
     @property
     def ub(self) -> int:
@@ -240,32 +245,53 @@ def _descend(cfg: TreeConfig, t: DeltaTree, q, dn0, b0):
 # --------------------------------------------------------------------------
 
 
+def searchnode(cfg: TreeConfig, t: DeltaTree, keys, leaf_val, leaf_b, dn):
+    """Paper SEARCHNODE resolution (Fig. 8 lines 9..17) at the walk's
+    final position: leaf match & ~mark, else overflow-buffer membership;
+    payload from the matching leaf or buffer slot.
+
+    Shape-polymorphic over scalar ``()`` or batched ``(K,)`` queries, and
+    the single source of truth both SearchEngines resolve through — the
+    scalar engine per lane (via `search_one`), the lockstep engine on the
+    kernel walk's outputs — so the bit-for-bit parity the conformance
+    suite asserts cannot drift.  Returns (found, payload | -1).
+    """
+    pos = _pos(cfg)
+    keys = jnp.asarray(keys)
+    leaf_hit = (leaf_val != EMPTY) & (cfg.key_of(leaf_val) == keys)
+    leaf_found = leaf_hit & ~t.mark[dn, pos[leaf_b]]
+    brow = t.buf[dn]                           # (..., buf_cap)
+    bhit = (brow != EMPTY) & (cfg.key_of(brow) == keys[..., None])
+    in_buf = jnp.any(bhit, axis=-1)
+    bsel = jnp.take_along_axis(
+        brow, jnp.argmax(bhit, axis=-1)[..., None], axis=-1)[..., 0]
+    found = jnp.where(leaf_hit, leaf_found, in_buf)
+    payload = jnp.where(leaf_hit, cfg.payload_of(leaf_val),
+                        cfg.payload_of(bsel))
+    return found, jnp.where(found, payload, -1)
+
+
 def search_one(cfg: TreeConfig, t: DeltaTree, key):
     """Returns (found: bool, payload: int32, hops: int32)."""
     pos = _pos(cfg)
     q = cfg.qpack(key)
     dn, b, hops = _descend(cfg, t, q, t.root, 1)
-    leaf_val = t.value[dn, pos[b]]
-    leaf_hit = (leaf_val != EMPTY) & (cfg.key_of(leaf_val) == key)
-    leaf_found = leaf_hit & ~t.mark[dn, pos[b]]
-    bkeys = cfg.key_of(t.buf[dn])
-    bhit = (t.buf[dn] != EMPTY) & (bkeys == key)
-    in_buf = jnp.any(bhit)
-    bpay = cfg.payload_of(t.buf[dn][jnp.argmax(bhit)])
-    found = jnp.where(leaf_hit, leaf_found, in_buf)
-    payload = jnp.where(leaf_hit, cfg.payload_of(leaf_val), bpay)
-    return found, jnp.where(found, payload, -1), hops
+    found, payload = searchnode(cfg, t, key, t.value[dn, pos[b]], b, dn)
+    return found, payload, hops
 
 
 def search_batch(cfg: TreeConfig, t: DeltaTree, keys: jax.Array):
-    """Vectorized wait-free search. Returns (found[K], hops[K])."""
-    f, _, h = jax.vmap(lambda v: search_one(cfg, t, v))(keys)
-    return f, h
+    """Vectorized wait-free search via ``cfg.engine``. (found[K], hops[K])."""
+    from repro.core import engine as E  # deferred: engine imports this module
+
+    return E.search(cfg, t, keys)
 
 
 def lookup_batch(cfg: TreeConfig, t: DeltaTree, keys: jax.Array):
-    """Map-mode search: (found[K], payload[K], hops[K])."""
-    return jax.vmap(lambda v: search_one(cfg, t, v))(keys)
+    """Map-mode search via ``cfg.engine``: (found[K], payload[K], hops[K])."""
+    from repro.core import engine as E  # deferred: engine imports this module
+
+    return E.lookup(cfg, t, keys)
 
 
 # --------------------------------------------------------------------------
@@ -1166,7 +1192,14 @@ def successor_one(cfg: TreeConfig, t: DeltaTree, key, max_chase: int = 8):
     return found, jnp.where(found, ck, 0)
 
 
+def successor_batch(cfg: TreeConfig, t: DeltaTree, keys: jax.Array):
+    """Vectorized wait-free successor queries via ``cfg.engine``."""
+    from repro.core import engine as E  # deferred: engine imports this module
+
+    return E.successor(cfg, t, keys)
+
+
 @functools.partial(jax.jit, static_argnums=0)
 def successor_jit(cfg: TreeConfig, t: DeltaTree, keys: jax.Array):
-    """Vectorized wait-free successor queries."""
-    return jax.vmap(lambda k: successor_one(cfg, t, k))(keys)
+    """Jitted engine-dispatched successor queries."""
+    return successor_batch(cfg, t, keys)

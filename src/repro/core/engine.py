@@ -1,0 +1,190 @@
+"""SearchEngine layer — pluggable read path for the ΔTree (DESIGN.md §6).
+
+Every wait-free read (search / lookup / contains / successor) on a
+``DeltaTree`` goes through one of the registered engines; ``cfg.engine``
+(a static ``TreeConfig`` field, threaded from ``make_index(..., engine=)``
+down to the per-shard forest dispatch and the serving pager) picks which:
+
+- ``"scalar"``  — the reference walk: ``vmap`` of a per-query
+  ``lax.while_loop`` descent (`deltatree._descend`).  Correct everywhere,
+  but the vmap scalarizes the ΔNode visit into per-level gathers — the
+  paper's one-block-transfer-per-ΔNode discipline is lost.
+- ``"lockstep"`` — frontier-synchronized rounds driving the Pallas vEB
+  walk kernel (`kernels.ops.delta_walk`): each round gathers every active
+  query's current ΔNode row with one contiguous DMA and descends it fully
+  in VMEM, so a round *is* the paper's memory transfer and the round count
+  is the O(log_B N) bound.  Pallas lowers compiled on TPU; elsewhere the
+  kernel runs in interpret mode, and packed int64 rows outside interpret
+  mode take the compiled jnp mirror (`kernels.ref.ref_veb_walk_rows`).
+
+Both engines implement full paper SEARCHNODE semantics — packed
+key/payload handling (``cfg.qpack``/``key_of``/``payload_of``), mark-bit
+liveness, overflow-buffer membership + payload extraction — and both
+report the identical per-query ``hops`` transfer statistic (scalar: ΔNode
+boundary crossings counted by `_descend`; lockstep: rounds the query
+stayed active).  The conformance suite asserts bit-for-bit equality.
+
+An engine is a table of pure functions over ``(cfg, tree, keys)``; new
+read paths (e.g. a fused update-aware walk) register with
+``register_engine`` and become selectable everywhere by name.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import deltatree as DT
+from repro.core import layout
+from repro.core.layout import EMPTY
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchEngine:
+    """One registered read path: pure functions over (cfg, tree, keys).
+
+    lookup:    (cfg, t, keys[K]) -> (found[K], payload[K], hops[K])
+               — map-mode read; set mode returns payload 0/-1.  ``search``
+               and ``contains`` are this minus the payload column.
+    successor: (cfg, t, keys[K]) -> (found[K], succ[K])
+    """
+
+    name: str
+    lookup: Callable[..., Any]
+    successor: Callable[..., Any]
+
+
+_ENGINES: dict[str, SearchEngine] = {}
+
+
+def register_engine(engine: SearchEngine, *, overwrite: bool = False
+                    ) -> SearchEngine:
+    """Install ``engine`` under ``engine.name``; re-registration opts in."""
+    if engine.name in _ENGINES and not overwrite:
+        raise ValueError(f"engine {engine.name!r} already registered")
+    _ENGINES[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> SearchEngine:
+    try:
+        return _ENGINES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown engine {name!r}; registered: {available_engines()}"
+        ) from None
+
+
+def available_engines() -> list[str]:
+    return sorted(_ENGINES)
+
+
+# --------------------------------------------------------------------------
+# dispatch helpers (the entry points deltatree/forest delegate to)
+# --------------------------------------------------------------------------
+
+
+def lookup(cfg, t, keys: jax.Array):
+    """Engine-dispatched map-mode read: (found[K], payload[K], hops[K])."""
+    return get_engine(cfg.engine).lookup(cfg, t, keys)
+
+
+def search(cfg, t, keys: jax.Array):
+    """Engine-dispatched membership read: (found[K], hops[K])."""
+    found, _, hops = lookup(cfg, t, keys)
+    return found, hops
+
+
+def successor(cfg, t, keys: jax.Array):
+    """Engine-dispatched ordered read: (found[K], succ[K])."""
+    return get_engine(cfg.engine).successor(cfg, t, keys)
+
+
+# --------------------------------------------------------------------------
+# "scalar" — the reference engine (vmap of the per-query while_loop walk)
+# --------------------------------------------------------------------------
+
+
+def _scalar_lookup(cfg, t, keys: jax.Array):
+    return jax.vmap(lambda k: DT.search_one(cfg, t, k))(keys)
+
+
+def _scalar_successor(cfg, t, keys: jax.Array):
+    return jax.vmap(lambda k: DT.successor_one(cfg, t, k))(keys)
+
+
+register_engine(SearchEngine(
+    name="scalar",
+    lookup=_scalar_lookup,
+    successor=_scalar_successor,
+))
+
+
+# --------------------------------------------------------------------------
+# "lockstep" — frontier rounds driving the Pallas vEB walk kernel
+# --------------------------------------------------------------------------
+
+
+def _lockstep_walk(cfg, t, qpacked: jax.Array):
+    from repro.kernels import ops as OPS
+
+    return OPS.delta_walk(t.value, t.child, t.root, qpacked,
+                          height=cfg.height, max_rounds=cfg.max_rounds)
+
+
+def _lockstep_lookup(cfg, t, keys: jax.Array):
+    keys = jnp.asarray(keys, jnp.int32)
+    lv, lb, dn, hops, _ = _lockstep_walk(cfg, t, cfg.qpack(keys))
+    # SEARCHNODE resolution shared verbatim with the scalar engine
+    found, payload = DT.searchnode(cfg, t, keys, lv, lb, dn)
+    return found, payload, hops
+
+
+def _lockstep_successor(cfg, t, keys: jax.Array, max_chase: int = 8):
+    """Lockstep successor: the walk kernel folds the min left-turn router
+    per round (router = min of its right subtree); a final leaf check and a
+    bounded liveness chase mirror `DT.successor_one` lane for lane."""
+    keys = jnp.asarray(keys, jnp.int32)
+    k = keys.shape[0]
+    pos = jnp.asarray(layout.veb_pos_table(cfg.height))
+    big = cfg.route_left
+
+    def one_pass(qk):
+        lv, lb, dn, _, cand = _lockstep_walk(cfg, t, cfg.qpack(qk))
+        leaf_live = (lv != EMPTY) & ~t.mark[dn, pos[lb]]
+        leaf_gt = leaf_live & (cfg.key_of(lv) > qk)
+        return jnp.where(leaf_gt & (lv < cand), lv, cand)
+
+    def chase(s):
+        qk, ck, found, active, it = s
+        cand = one_pass(qk)
+        cknew = cfg.key_of(cand)
+        exists = cand < big
+        # candidate routers may be tombstones: verify liveness in lockstep
+        live, _, _ = _lockstep_lookup(cfg, t, cknew)
+        done_now = ~exists | live
+        return (
+            jnp.where(active & ~done_now, cknew, qk),
+            jnp.where(active, cknew, ck),
+            jnp.where(active, done_now & exists, found),
+            active & ~done_now,
+            it + 1,
+        )
+
+    def cond(s):
+        return jnp.any(s[3]) & (s[4] < max_chase)
+
+    init = (keys, jnp.zeros((k,), jnp.int32), jnp.zeros((k,), jnp.bool_),
+            jnp.ones((k,), jnp.bool_), jnp.int32(0))
+    _, ck, found, _, _ = jax.lax.while_loop(cond, chase, init)
+    return found, jnp.where(found, ck, 0)
+
+
+register_engine(SearchEngine(
+    name="lockstep",
+    lookup=_lockstep_lookup,
+    successor=_lockstep_successor,
+))

@@ -54,7 +54,9 @@ class ForestConfig:
     """Static forest parameters (hashable; closed over by jitted fns).
 
     num_shards: S — number of independent ΔTree arenas.
-    tree:       per-shard TreeConfig (arena size is *per shard*).
+    tree:       per-shard TreeConfig (arena size is *per shard*; its
+                ``engine`` field picks the SearchEngine every shard's
+                reads run under the shard_map dispatch).
     key_min/max: key domain used for fallback equi-width boundaries.
     """
 
@@ -171,12 +173,14 @@ def successor_jit(fcfg: ForestConfig, f: Forest, keys: jax.Array):
     dkeys = R.scatter_dense(r, fcfg.num_shards, keys, jnp.int32(0))
 
     def per_shard(t, ks):
-        found, succ = jax.vmap(
-            lambda k: DT.successor_one(fcfg.tree, t, k))(ks)
-        # shard minimum = successor of (KEY_MIN - 1) — one extra probe
-        has_min, mn = DT.successor_one(
-            fcfg.tree, t, jnp.int32(layout.KEY_MIN - 1))
-        return found, succ, has_min, mn
+        # shard minimum = successor of (KEY_MIN - 1), riding the same
+        # engine dispatch as one extra lane of the batch (lanes are
+        # independent, so results are unchanged and the lockstep engine
+        # pays no second walk)
+        probe = jnp.concatenate(
+            [ks, jnp.full((1,), layout.KEY_MIN - 1, jnp.int32)])
+        found, succ = DT.successor_batch(fcfg.tree, t, probe)
+        return found[:-1], succ[:-1], found[-1], succ[-1]
 
     found, succ, has_min, mins = R.dispatch(
         fcfg.num_shards, per_shard, f.trees, dkeys)

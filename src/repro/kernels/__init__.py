@@ -9,6 +9,13 @@ All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
 validated on CPU with interpret=True against ref.py.
 """
 
-from repro.kernels.ops import delta_contains, delta_search, paged_decode_attention
+from repro.kernels.ops import (
+    default_interpret,
+    delta_contains,
+    delta_search,
+    delta_walk,
+    paged_decode_attention,
+)
 
-__all__ = ["delta_search", "delta_contains", "paged_decode_attention"]
+__all__ = ["delta_search", "delta_contains", "delta_walk",
+           "default_interpret", "paged_decode_attention"]

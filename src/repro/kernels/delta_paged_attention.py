@@ -71,12 +71,9 @@ def _kernel(maxp: int, page_size: int, scale: float,
         )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("interpret",)
-)
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                            block_tables: jax.Array, seq_lens: jax.Array,
-                           *, interpret: bool = True) -> jax.Array:
+                           *, interpret: bool | None = None) -> jax.Array:
     """ΔTree-paged GQA decode attention.
 
     q:            (B, QH, D)
@@ -85,7 +82,23 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                   compute via seq_lens)
     seq_lens:     (B,) int32
     Returns (B, QH, D) in q.dtype.
+
+    ``interpret=None`` auto-resolves at call time like the search kernels
+    (`ops.default_interpret`): compiled on TPU, interpret elsewhere —
+    serving decode steps stop silently paying the interpreter tax on TPU.
     """
+    from repro.kernels.ops import _resolve_interpret
+
+    return _paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                   seq_lens,
+                                   interpret=_resolve_interpret(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret",)
+)
+def _paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                            *, interpret: bool):
     b, qh, d = q.shape
     np_, ps, kvh, _ = k_pages.shape
     maxp = block_tables.shape[1]

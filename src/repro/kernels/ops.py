@@ -1,50 +1,116 @@
 """jit'd public wrappers around the Pallas kernels.
 
-- `delta_search`       — multi-round driver for veb_search: sort queries by
-  their current ΔNode, run the level kernel (one scalar-prefetched ΔNode row
-  DMA per query tile), hop, repeat until every query lands on its leaf.
-- `delta_contains`     — full paper SEARCHNODE semantics on top (mark bit +
+- `delta_walk`         — multi-round lockstep driver for veb_search: gather
+  each active query's current ΔNode row (one contiguous DMA per query —
+  the paper's "memory transfer"), run the level kernel (one full in-ΔNode
+  descent), hop to the child ΔNode, repeat until every query lands on its
+  leaf.  Reports per-query hop counts (= rounds active = ΔNodes visited)
+  and the folded successor candidate.  This is the engine room of the
+  ``"lockstep"`` SearchEngine (repro.core.engine).
+- `delta_search`       — legacy 3-tuple contract on top of `delta_walk`.
+- `delta_contains`     — paper SEARCHNODE set semantics on top (mark bit +
   overflow buffer check).
 - `paged_decode_attention` — re-exported from delta_paged_attention.
+
+Execution-mode resolution (``interpret=None`` everywhere): Pallas compiled
+on TPU, interpret mode elsewhere, overridable per call (``interpret=``) or
+process-wide via ``REPRO_PALLAS_INTERPRET=0/1``.  Packed int64 rows cannot
+lower through the TPU Pallas pipeline, so the compiled path for them is
+``kernels.ref.ref_veb_walk_rows`` — same lockstep rounds, XLA-compiled.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import layout
 from repro.kernels.delta_paged_attention import paged_decode_attention  # noqa: F401
-from repro.kernels.veb_search import pad_arena, veb_walk_rows
+from repro.kernels.veb_search import pad_arena, veb_walk_rows, walk_big
+
+
+def default_interpret() -> bool:
+    """Auto-detected Pallas mode: compiled on TPU, interpret elsewhere.
+
+    ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode (kernel debugging on
+    TPU), ``=0`` forces compiled lowering; unset (or set empty) defers to
+    the backend so TPU runs stop silently paying the interpreter tax."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip()
+    if env:
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def _row_walk(rows, childrows, queries, *, height, q_tile, interpret):
+    """One lockstep round: the Pallas kernel, or its compiled jnp mirror
+    when the kernel cannot lower (int64 packed rows outside interpret)."""
+    if not interpret and rows.dtype == jnp.int64:
+        from repro.kernels.ref import ref_veb_walk_rows
+
+        return ref_veb_walk_rows(rows, childrows, queries, height=height)
+    return veb_walk_rows(rows, childrows, queries, height=height,
+                         q_tile=q_tile, interpret=interpret)
+
+
+def delta_walk(value: jax.Array, child: jax.Array, root: jax.Array,
+               queries: jax.Array, *, height: int, q_tile: int = 256,
+               max_rounds: int = 64, interpret: bool | None = None):
+    """Multi-hop ΔTree walk in lockstep rounds over the query frontier.
+
+    value/child are unpadded arena arrays (value int32, or int64 packed map
+    mode); ``queries`` are *packed* values in the same dtype (`cfg.qpack`).
+    Rows are 128-padded here; the query batch is padded to a ``q_tile``
+    multiple with a ROUTE_LEFT sentinel that provably matches no stored
+    leaf, and padded lanes start *resolved* so they never contribute a
+    round to the termination test.
+
+    ``interpret=None`` resolves via `default_interpret` *at call time*
+    (env/backend changes are honored between calls); callers that trace
+    this under an outer jit bake the mode at their own trace time.
+
+    Returns per query (batch-padding sliced off):
+      leaf_val: packed value at the final position (EMPTY on miss)
+      leaf_b:   final BFS position in the final ΔNode
+      final_dn: final ΔNode id
+      hops:     rounds the query stayed active = ΔNodes visited — exactly
+                the scalar engine's `_descend` transfer statistic
+      cand:     min left-turn router over the whole walk (successor lower
+                bound; ``walk_big(dtype)`` = the dtype's ROUTE_LEFT when no
+                left turn happened)
+    """
+    return _delta_walk(value, child, root, queries, height=height,
+                       q_tile=q_tile, max_rounds=max_rounds,
+                       interpret=_resolve_interpret(interpret))
 
 
 @functools.partial(
     jax.jit, static_argnames=("height", "q_tile", "max_rounds", "interpret")
 )
-def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
-                 queries: jax.Array, *, height: int, q_tile: int = 256,
-                 max_rounds: int = 64, interpret: bool = True):
-    """Multi-hop ΔTree search via the Pallas walk kernel, in lockstep rounds:
-    each round gathers the frontier's ΔNode rows (one contiguous DMA per
-    query — the paper's "memory transfer") and descends them fully in VMEM.
-
-    value/child may be unpadded arena arrays; rows are 128-padded here.
-    Returns (leaf_val, leaf_b, final_dn) per query (same contract as
-    `kernels.ref.ref_delta_search`).
-    """
+def _delta_walk(value, child, root, queries, *, height, q_tile, max_rounds,
+                interpret: bool):
     value_p, child_p = pad_arena(value, child)
+    queries = queries.astype(value.dtype)
     k = queries.shape[0]
     kp = (k + q_tile - 1) // q_tile * q_tile
-    qpad = jnp.pad(queries, (0, kp - k))
+    big = jnp.asarray(walk_big(value.dtype), value.dtype)
+    qpad = jnp.pad(queries, (0, kp - k), constant_values=walk_big(value.dtype))
 
     state = dict(
         dn=jnp.full((kp,), root, jnp.int32),
-        resolved=jnp.zeros((kp,), jnp.bool_),
-        leaf_val=jnp.zeros((kp,), jnp.int32),
+        # padding lanes are born resolved: they never gate termination
+        resolved=jnp.arange(kp) >= k,
+        leaf_val=jnp.zeros((kp,), value.dtype),
         leaf_b=jnp.ones((kp,), jnp.int32),
         final_dn=jnp.full((kp,), root, jnp.int32),
+        hops=jnp.zeros((kp,), jnp.int32),
+        cand=jnp.full((kp,), big, value.dtype),
         rounds=jnp.int32(0),
     )
 
@@ -55,7 +121,7 @@ def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
         dnc = jnp.clip(s["dn"], 0, value.shape[0] - 1)
         rows = value_p[dnc]          # (K, UBp) — the per-query ΔNode DMA
         childrows = child_p[dnc]
-        lv, lb, nxt = veb_walk_rows(
+        lv, lb, nxt, rcand = _row_walk(
             rows, childrows, qpad, height=height, q_tile=q_tile,
             interpret=interpret,
         )
@@ -67,22 +133,47 @@ def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
             leaf_val=jnp.where(done_now, lv, s["leaf_val"]),
             leaf_b=jnp.where(done_now, lb, s["leaf_b"]),
             final_dn=jnp.where(done_now, s["dn"], s["final_dn"]),
+            hops=s["hops"] + act.astype(jnp.int32),
+            cand=jnp.where(act & (rcand < s["cand"]), rcand, s["cand"]),
             rounds=s["rounds"] + 1,
         )
 
     state = jax.lax.while_loop(cond, body, state)
-    return state["leaf_val"][:k], state["leaf_b"][:k], state["final_dn"][:k]
+    return (state["leaf_val"][:k], state["leaf_b"][:k],
+            state["final_dn"][:k], state["hops"][:k], state["cand"][:k])
+
+
+def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
+                 queries: jax.Array, *, height: int, q_tile: int = 256,
+                 max_rounds: int = 64, interpret: bool | None = None):
+    """Legacy 3-tuple walk: (leaf_val, leaf_b, final_dn) per query (same
+    contract as `kernels.ref.ref_delta_search`); ``interpret=None`` =
+    auto-resolved at call time like `delta_walk`."""
+    lv, lb, dn, _, _ = delta_walk(
+        value, child, root, queries,
+        height=height, q_tile=q_tile, max_rounds=max_rounds,
+        interpret=interpret,
+    )
+    return lv, lb, dn
+
+
+def delta_contains(value: jax.Array, mark: jax.Array, child: jax.Array,
+                   buf: jax.Array, root: jax.Array, queries: jax.Array, *,
+                   height: int, q_tile: int = 256, max_rounds: int = 64,
+                   interpret: bool | None = None):
+    """Paper SEARCHNODE on top of the kernel walk: leaf match & ~mark, else
+    the ΔNode's overflow buffer (paper Fig. 8 lines 9..17)."""
+    return _delta_contains(value, mark, child, buf, root, queries,
+                           height=height, q_tile=q_tile,
+                           max_rounds=max_rounds,
+                           interpret=_resolve_interpret(interpret))
 
 
 @functools.partial(
     jax.jit, static_argnames=("height", "q_tile", "max_rounds", "interpret")
 )
-def delta_contains(value: jax.Array, mark: jax.Array, child: jax.Array,
-                   buf: jax.Array, root: jax.Array, queries: jax.Array, *,
-                   height: int, q_tile: int = 256, max_rounds: int = 64,
-                   interpret: bool = True):
-    """Paper SEARCHNODE on top of the kernel walk: leaf match & ~mark, else
-    the ΔNode's overflow buffer (paper Fig. 8 lines 9..17)."""
+def _delta_contains(value, mark, child, buf, root, queries, *, height,
+                    q_tile, max_rounds, interpret: bool):
     pos = jnp.asarray(layout.veb_pos_table(height))
     lv, lb, dn = delta_search(
         value, child, root, queries,

@@ -12,6 +12,48 @@ from repro.core.layout import EMPTY
 
 
 @functools.partial(jax.jit, static_argnames=("height",))
+def ref_veb_walk_rows(rows: jax.Array, childrows: jax.Array,
+                      queries: jax.Array, *, height: int):
+    """Pure-jnp mirror of ``veb_search.veb_walk_rows`` (identical contract:
+    one full in-ΔNode descent per query over pre-gathered rows, returning
+    (leaf_val, leaf_b, next_dn, cand)).
+
+    Besides being the kernel's allclose oracle this is the *compiled*
+    non-Pallas walk: `ops` routes here when the Pallas kernel cannot lower
+    (int64 packed rows on TPU) — same lockstep round structure, same one
+    row gather per query per round, just XLA-compiled gathers instead of a
+    hand-written VMEM tile.
+    """
+    from repro.kernels.veb_search import walk_big
+
+    pos = jnp.asarray(layout.veb_pos_table(height))
+    bottom0 = 2 ** (height - 1)
+    big = walk_big(rows.dtype)
+
+    def take(b):
+        return jnp.take_along_axis(rows, pos[b][:, None], axis=1)[:, 0]
+
+    v = queries
+    b = jnp.ones(v.shape, jnp.int32)
+    cand = jnp.full(v.shape, big, rows.dtype)
+    for _ in range(height - 1):
+        router = take(b)
+        left = take(jnp.minimum(2 * b, 2 * bottom0 - 1))
+        internal = (b < bottom0) & (left != EMPTY)
+        go_right = v >= router
+        go_left = internal & ~go_right
+        cand = jnp.where(go_left & (router < cand), router, cand)
+        b = jnp.where(internal, 2 * b + go_right.astype(b.dtype), b)
+
+    leaf_val = take(b)
+    at_bottom = b >= bottom0
+    slot = jnp.where(at_bottom, b - bottom0, 0)
+    child = jnp.take_along_axis(childrows, slot[:, None], axis=1)[:, 0]
+    nxt = jnp.where(at_bottom, child, jnp.int32(-1))
+    return leaf_val, b, nxt, cand
+
+
+@functools.partial(jax.jit, static_argnames=("height",))
 def ref_delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
                      queries: jax.Array, *, height: int):
     """Oracle for the multi-hop ΔTree search over (value, child) arena rows.

@@ -8,10 +8,18 @@ walk is VREG arithmetic: implicit complete-BST position math plus the
 compile-time vEB permutation table, vectorized across the query tile.
 
 The multi-ΔNode walk runs in lockstep rounds at the JAX level
-(`ops.delta_search`): gather rows for the query frontier, run this kernel
-(one full in-ΔNode descent per query), hop to the child ΔNode, repeat.
-Round count = ΔNode-depth of the tree = the paper's O(log_B N) transfer
-bound — each round is exactly one "memory transfer" per query.
+(`ops.delta_walk`, the driver behind the ``"lockstep"`` SearchEngine):
+gather rows for the query frontier, run this kernel (one full in-ΔNode
+descent per query), hop to the child ΔNode, repeat.  Round count =
+ΔNode-depth of the tree = the paper's O(log_B N) transfer bound — each
+round is exactly one "memory transfer" per query.
+
+Rows may be int32 (paper set mode) or int64 (map mode: ``key << bits |
+payload`` packed values — ordering by packed value equals ordering by key,
+so the walk is unchanged).  Besides the leaf triple the kernel reports the
+per-ΔNode *successor candidate*: the minimum router passed on a left turn
+(router = min of its right subtree, so it lower-bounds every key to the
+query's right) — the lockstep successor folds these across rounds.
 
 The serving-path sibling kernel (`delta_paged_attention`) shows the same
 indirection done with scalar-prefetched `BlockSpec index_map` DMA instead
@@ -34,9 +42,18 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def _kernel(height: int,
+def walk_big(dtype) -> int:
+    """Successor-candidate identity for a row dtype — must equal the tree's
+    ROUTE_LEFT sentinel (int32: INT32_MAX; packed int64 map mode: 1 << 62)
+    so candidate folding matches the scalar engine bit for bit."""
+    if jnp.dtype(dtype) == jnp.int64:
+        return 1 << 62
+    return int(layout.ROUTE_LEFT)
+
+
+def _kernel(height: int, big: int,
             pos_ref, q_ref, rows_ref, childrows_ref,
-            leaf_val_ref, leaf_b_ref, next_dn_ref):
+            leaf_val_ref, leaf_b_ref, next_dn_ref, cand_ref):
     h = height
     bottom0 = 2 ** (h - 1)
     pos = pos_ref[...]                                   # vEB permutation
@@ -47,14 +64,18 @@ def _kernel(height: int,
         # per-lane gather rows[i, pos[b[i]]]
         return jnp.take_along_axis(rows, pos[b][:, None], axis=1)[:, 0]
 
-    b = jnp.ones_like(v)
+    b = jnp.ones(v.shape, jnp.int32)
+    cand = jnp.full(v.shape, big, rows.dtype)
     # fully unrolled H-1 level walk — pure VREG work on VMEM-resident rows
     for _ in range(h - 1):
         router = take(b)
         left = take(jnp.minimum(2 * b, 2 * bottom0 - 1))
         internal = (b < bottom0) & (left != EMPTY)
-        step = (v >= router).astype(b.dtype)
-        b = jnp.where(internal, 2 * b + step, b)
+        go_right = v >= router
+        # left turn: router lower-bounds the right subtree's minimum
+        go_left = internal & ~go_right
+        cand = jnp.where(go_left & (router < cand), router, cand)
+        b = jnp.where(internal, 2 * b + go_right.astype(b.dtype), b)
 
     leaf_val = take(b)
     at_bottom = b >= bottom0
@@ -65,6 +86,7 @@ def _kernel(height: int,
     leaf_val_ref[...] = leaf_val
     leaf_b_ref[...] = b
     next_dn_ref[...] = nxt
+    cand_ref[...] = cand
 
 
 @functools.partial(jax.jit, static_argnames=("height", "q_tile", "interpret"))
@@ -72,26 +94,36 @@ def veb_walk_rows(rows: jax.Array, childrows: jax.Array, queries: jax.Array,
                   *, height: int, q_tile: int = 256, interpret: bool = True):
     """One full in-ΔNode descent per query.
 
-    rows:      (K, UBp) int32 — each query's current ΔNode row (vEB order)
+    rows:      (K, UBp) int32/int64 — each query's current ΔNode row
+               (vEB order; int64 = packed map-mode values)
     childrows: (K, CP)  int32 — matching bottom-slot child ids (-1 none)
-    queries:   (K,)     int32, K % q_tile == 0
+    queries:   (K,)     packed, same dtype as rows; K % q_tile == 0
 
-    Returns (leaf_val, leaf_b, next_dn), each (K,) int32; next_dn = -1 when
-    the walk ends inside this ΔNode.
+    Returns (leaf_val, leaf_b, next_dn, cand): leaf_val/cand in the row
+    dtype, leaf_b/next_dn int32, each (K,).  next_dn = -1 when the walk
+    ends inside this ΔNode; cand = min left-turn router (``walk_big`` when
+    no left turn happened).
     """
     k = queries.shape[0]
     assert k % q_tile == 0, (k, q_tile)
+    assert queries.dtype == rows.dtype, (queries.dtype, rows.dtype)
     n_tiles = k // q_tile
     ubp = rows.shape[1]
     cp = childrows.shape[1]
+    big = walk_big(rows.dtype)
 
     pos = jnp.asarray(layout.veb_pos_table(height))
     posp = _round_up(pos.shape[0], 128)
     pos = jnp.pad(pos, (0, posp - pos.shape[0]))
 
-    out_shape = [jax.ShapeDtypeStruct((k,), jnp.int32)] * 3
+    out_shape = [
+        jax.ShapeDtypeStruct((k,), rows.dtype),   # leaf_val
+        jax.ShapeDtypeStruct((k,), jnp.int32),    # leaf_b
+        jax.ShapeDtypeStruct((k,), jnp.int32),    # next_dn
+        jax.ShapeDtypeStruct((k,), rows.dtype),   # cand
+    ]
     return pl.pallas_call(
-        functools.partial(_kernel, height),
+        functools.partial(_kernel, height, big),
         grid=(n_tiles,),
         in_specs=[
             pl.BlockSpec((posp,), lambda i: (0,)),
@@ -99,7 +131,7 @@ def veb_walk_rows(rows: jax.Array, childrows: jax.Array, queries: jax.Array,
             pl.BlockSpec((q_tile, ubp), lambda i: (i, 0)),
             pl.BlockSpec((q_tile, cp), lambda i: (i, 0)),
         ],
-        out_specs=[pl.BlockSpec((q_tile,), lambda i: (i,))] * 3,
+        out_specs=[pl.BlockSpec((q_tile,), lambda i: (i,))] * 4,
         out_shape=out_shape,
         interpret=interpret,
     )(pos, queries, rows, childrows)

@@ -1,7 +1,7 @@
 """AdamW with global-norm clipping and cosine schedule (from scratch).
 
 Moment dtype is configurable: bf16 moments halve optimizer HBM (needed to
-fit the 398B arch on a 256-chip pod at 16 GB/chip; DESIGN.md §6) — f32 for
+fit the 398B arch on a 256-chip pod at 16 GB/chip; DESIGN.md §7) — f32 for
 small runs.  States shard exactly like their params (jit out_shardings).
 """
 

@@ -1,6 +1,6 @@
 """Parameter / cache / batch PartitionSpecs for the production mesh.
 
-Scheme (DESIGN.md §6): TP on "model" (heads / FFN hidden / experts / vocab),
+Scheme (DESIGN.md §7): TP on "model" (heads / FFN hidden / experts / vocab),
 FSDP on "data" for every large matrix (params replicated across "pod";
 cross-pod traffic is gradient-only), batch on ("pod","data").  Stacked
 scan params carry a leading (reps,) axis that is never sharded.

@@ -4,8 +4,8 @@ Supports the GQA decoder families (dense / moe / vlm backbones).  Layer
 K/V live in page pools (L, NP, PS, KVH, HD); every decode step:
   1. resolves each active sequence's block table via the ΔTree pager
      (wait-free batched search — the paper's hot path),
-  2. runs `delta_paged_attention` per layer (Pallas kernel, interpret=True
-     on CPU),
+  2. runs `delta_paged_attention` per layer (Pallas kernel, compiled on
+     TPU, interpret mode elsewhere — `kernels.ops.default_interpret`),
   3. appends the new K/V into the tail page slot, allocating a fresh page
      (ΔTree insert) when a sequence crosses a page boundary.
 

@@ -12,7 +12,10 @@ The default index is ``make_index("deltatree", cfg=cfg.tree_config)``;
 ``ShardedDeltaPager`` defaults to the forest backend and band-interleaves
 the key encoding.  Any handle with ``Capability.map_mode`` can be injected
 via the ``index=`` argument — the pager protocol never touches backend
-internals.
+internals.  ``PagerConfig.engine`` picks the SearchEngine the block-table
+lookups run under (``"lockstep"`` = the Pallas vEB walk on the decode hot
+path); it threads through ``tree_config`` / ``forest_config`` into the
+default index.
 
 Requires 64-bit mode (packed int64 values): callers must run with
 JAX_ENABLE_X64=1 or `jax.config.update("jax_enable_x64", True)`.
@@ -37,6 +40,7 @@ class PagerConfig:
     max_seqs: int = 256
     max_blocks: int = 1024        # logical blocks per sequence
     tree_height: int = 7          # UB=127 ΔNodes (paper's best)
+    engine: str = "scalar"        # SearchEngine for block-table lookups
 
     @property
     def payload_bits(self) -> int:
@@ -51,6 +55,7 @@ class PagerConfig:
             max_dnodes=need,
             buf_cap=64,
             payload_bits=self.payload_bits,
+            engine=self.engine,
         )
 
     def make_index(self) -> Index:

@@ -7,6 +7,13 @@ against ``core.oracle``.  Capability-gated surfaces (map mode, successor)
 skip where the backend declares no support; map mode additionally needs
 JAX_ENABLE_X64 (packed int64 values).  A subprocess leg replays the forest
 trace over 8 fake host devices (real shard_map dispatch).
+
+Engine parity: backends declaring the ``lockstep`` SearchEngine replay the
+same randomized trace under ``engine="scalar"`` and ``engine="lockstep"``
+and must agree *bit for bit* — found, payloads, successor results, and the
+per-query hop counts (the transfer statistic) — including marked leaves
+and buffer-resident keys in map mode (mid-maintenance states injected at
+the core level).
 """
 
 import jax
@@ -20,11 +27,14 @@ from repro.api import (
     OpBatch,
     available_backends,
     make_index,
+    supported_engines,
 )
 from repro.core.oracle import MapOracle, SetOracle
 from tests._subproc import run_py
 
 BACKENDS = available_backends()
+ENGINE_BACKENDS = [b for b in BACKENDS
+                   if "lockstep" in supported_engines(b)]
 KEY_HI = 300
 
 # trace-scale construction kwargs per backend
@@ -40,11 +50,13 @@ BUILD_KW = {
 MAP_BACKENDS = {"deltatree", "forest"}
 
 
-def _mk(backend: str, initial, payload_bits: int = 0, payloads=None) -> Index:
+def _mk(backend: str, initial, payload_bits: int = 0, payloads=None,
+        engine: str | None = None) -> Index:
     kw = dict(BUILD_KW[backend])
     if payload_bits:
         kw["payload_bits"] = payload_bits
-    return make_index(backend, initial=initial, payloads=payloads, **kw)
+    return make_index(backend, initial=initial, payloads=payloads,
+                      engine=engine, **kw)
 
 
 def _check_successor(ix: Index, oracle_keys: list[int], rng) -> None:
@@ -151,6 +163,218 @@ def test_index_and_opbatch_flow_through_jit():
 def test_make_index_unknown_backend():
     with pytest.raises(KeyError, match="registered"):
         make_index("btree_of_dreams")
+
+
+# --------------------------------------------------------------------------
+# SearchEngine parity: scalar vs lockstep, bit for bit
+# --------------------------------------------------------------------------
+
+
+def _assert_engines_agree(ix_s: Index, ix_l: Index, keys) -> None:
+    """Reads through both engine handles must match bit for bit, hops
+    (the transfer statistic) included."""
+    q = jnp.asarray(keys)
+    f_s, h_s = ix_s.search(q)
+    f_l, h_l = ix_l.search(q)
+    np.testing.assert_array_equal(np.asarray(f_s), np.asarray(f_l))
+    np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_l))
+    sf_s, sc_s = ix_s.successor(q)
+    sf_l, sc_l = ix_l.successor(q)
+    np.testing.assert_array_equal(np.asarray(sf_s), np.asarray(sf_l))
+    np.testing.assert_array_equal(np.asarray(sc_s), np.asarray(sc_l))
+
+
+@pytest.mark.parametrize("backend", ENGINE_BACKENDS)
+def test_engine_parity_set_trace(backend):
+    """The same randomized op trace under engine="scalar" and
+    engine="lockstep" agrees bit-for-bit at every step (found, hops,
+    successor, update results) — deletes leave marked leaves behind, so
+    tombstone handling is exercised throughout."""
+    rng = np.random.default_rng(21)
+    initial = np.unique(rng.integers(1, KEY_HI, 90).astype(np.int32))
+    ix_s = _mk(backend, initial, engine="scalar")
+    ix_l = _mk(backend, initial, engine="lockstep")
+    assert ix_s.engine == "scalar" and ix_l.engine == "lockstep"
+    oracle = SetOracle(initial)
+    for _ in range(6):
+        keys = rng.integers(1, KEY_HI + 5, size=24).astype(np.int32)
+        _assert_engines_agree(ix_s, ix_l, keys)
+        # both engines still track the oracle, not just each other
+        f_l, _ = ix_l.search(jnp.asarray(keys))
+        np.testing.assert_array_equal(
+            np.asarray(f_l), oracle.snapshot_search(keys))
+        kinds = rng.integers(0, 3, size=24).astype(np.int32)
+        batch = OpBatch.mixed(kinds, np.clip(keys, 1, KEY_HI - 1))
+        ix_s, r_s = ix_s.insert_delete(batch)
+        ix_l, r_l = ix_l.insert_delete(batch)
+        oracle.apply_updates(np.asarray(batch.kinds), np.asarray(batch.keys))
+        np.testing.assert_array_equal(np.asarray(r_s), np.asarray(r_l))
+    assert ix_s.live_items() == ix_l.live_items() == \
+        [(k, 0) for k in sorted(oracle.s)]
+
+
+@pytest.mark.parametrize("backend", ENGINE_BACKENDS)
+def test_engine_parity_map_trace(backend):
+    """Map-mode parity: payloads unpacked from packed int64 leaves must be
+    identical through both engines at every step."""
+    if not jax.config.jax_enable_x64:
+        pytest.skip("map mode packs int64 values; needs JAX_ENABLE_X64")
+    bits = 6
+    rng = np.random.default_rng(22)
+    initial = np.unique(rng.integers(1, KEY_HI, 70).astype(np.int32))
+    pays = rng.integers(0, 2**bits, size=initial.size).astype(np.int32)
+    ix_s = _mk(backend, initial, payload_bits=bits, payloads=pays,
+               engine="scalar")
+    ix_l = _mk(backend, initial, payload_bits=bits, payloads=pays,
+               engine="lockstep")
+    for _ in range(4):
+        keys = rng.integers(1, KEY_HI, size=20).astype(np.int32)
+        f_s, p_s, h_s = ix_s.lookup(jnp.asarray(keys))
+        f_l, p_l, h_l = ix_l.lookup(jnp.asarray(keys))
+        np.testing.assert_array_equal(np.asarray(f_s), np.asarray(f_l))
+        np.testing.assert_array_equal(np.asarray(p_s), np.asarray(p_l))
+        np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_l))
+        _assert_engines_agree(ix_s, ix_l, keys)
+        kinds = rng.integers(0, 3, size=20).astype(np.int32)
+        vals = rng.integers(0, 2**bits, size=20).astype(np.int32)
+        batch = OpBatch.mixed(kinds, keys, vals)
+        ix_s, r_s = ix_s.insert_delete(batch)
+        ix_l, r_l = ix_l.insert_delete(batch)
+        np.testing.assert_array_equal(np.asarray(r_s), np.asarray(r_l))
+    assert ix_s.live_items() == ix_l.live_items()
+
+
+def test_engine_parity_marked_and_buffered_state():
+    """Mid-maintenance ΔTree states — buffer-resident keys and marked
+    leaves that no API-level trace can pin down (update_batch drains
+    buffers to empty, invariant I5) — read identically through both
+    engines: found, payload, hops, successor, all bit for bit."""
+    if not jax.config.jax_enable_x64:
+        pytest.skip("map mode packs int64 values; needs JAX_ENABLE_X64")
+    from repro.core import deltatree as DT
+
+    bits = 6
+    rng = np.random.default_rng(23)
+    cfg_s = DT.TreeConfig(height=4, max_dnodes=256, buf_cap=8,
+                          payload_bits=bits)
+    cfg_l = DT.TreeConfig(height=4, max_dnodes=256, buf_cap=8,
+                          payload_bits=bits, engine="lockstep")
+    vals = np.unique(rng.integers(1, KEY_HI, 100).astype(np.int32))
+    pays = rng.integers(0, 2**bits, size=vals.size).astype(np.int32)
+    t = DT.bulk_build(cfg_s, vals, pays)
+    kinds = rng.choice([1, 2], size=40).astype(np.int32)
+    keys = rng.integers(1, KEY_HI, size=40).astype(np.int32)
+    pay2 = rng.integers(0, 2**bits, size=40).astype(np.int32)
+    t, _, _ = DT.update_batch(cfg_s, t, jnp.asarray(kinds), jnp.asarray(keys),
+                              jnp.asarray(pay2))
+    assert bool(np.asarray(t.mark).any()), "trace should leave tombstones"
+
+    # inject buffer-resident keys into the ΔNode that owns their descent
+    # (keys absent from build AND churn, so the buffer is the only owner)
+    absent = np.setdiff1d(np.arange(1, KEY_HI),
+                          np.concatenate([vals, keys]))
+    bkeys = rng.choice(absent, 4, replace=False).astype(np.int32)
+    buf, bcount = t.buf, t.bcount
+    for i, k in enumerate(bkeys):
+        dn, _, _ = DT._descend(cfg_s, t, cfg_s.qpack(jnp.int32(k)), t.root, 1)
+        dn = int(dn)
+        slot = int(np.argmax(np.asarray(buf[dn]) == 0))
+        buf = buf.at[dn, slot].set((int(k) << bits) | (i + 1))
+        bcount = bcount.at[dn].add(1)
+    t = t._replace(buf=buf, bcount=bcount)
+
+    q = np.concatenate([rng.integers(1, KEY_HI + 5, 40).astype(np.int32),
+                        bkeys])
+    f_s, p_s, h_s = DT.lookup_jit(cfg_s, t, jnp.asarray(q))
+    f_l, p_l, h_l = DT.lookup_jit(cfg_l, t, jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(f_s), np.asarray(f_l))
+    np.testing.assert_array_equal(np.asarray(p_s), np.asarray(p_l))
+    np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_l))
+    # the buffered keys are live with their injected payloads — via both
+    np.testing.assert_array_equal(np.asarray(f_l)[-4:], np.ones(4, bool))
+    np.testing.assert_array_equal(np.asarray(p_l)[-4:],
+                                  np.arange(1, 5, dtype=np.int32))
+    sf_s, sc_s = DT.successor_jit(cfg_s, t, jnp.asarray(q))
+    sf_l, sc_l = DT.successor_jit(cfg_l, t, jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(sf_s), np.asarray(sf_l))
+    np.testing.assert_array_equal(np.asarray(sc_s), np.asarray(sc_l))
+
+
+def test_engine_parity_map_forced_compiled_fallback(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=0 with packed int64 rows exercises the
+    *compiled* non-Pallas fallback (`kernels.ref.ref_veb_walk_rows`) —
+    the production map-mode read path on TPU — and must stay bit-for-bit
+    identical to the scalar engine."""
+    if not jax.config.jax_enable_x64:
+        pytest.skip("map mode packs int64 values; needs JAX_ENABLE_X64")
+    from repro.core import deltatree as DT
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    bits = 5
+    rng = np.random.default_rng(24)
+    # unique cfg values so no earlier trace's interpret choice is reused
+    cfg_s = DT.TreeConfig(height=4, max_dnodes=333, buf_cap=7,
+                          payload_bits=bits)
+    cfg_l = DT.TreeConfig(height=4, max_dnodes=333, buf_cap=7,
+                          payload_bits=bits, engine="lockstep")
+    vals = np.unique(rng.integers(1, KEY_HI, 80).astype(np.int32))
+    pays = rng.integers(0, 2**bits, vals.size).astype(np.int32)
+    t = DT.bulk_build(cfg_s, vals, pays)
+    kinds = rng.choice([1, 2], size=30).astype(np.int32)
+    keys = rng.integers(1, KEY_HI, size=30).astype(np.int32)
+    t, _, _ = DT.update_batch(cfg_s, t, jnp.asarray(kinds), jnp.asarray(keys),
+                              jnp.zeros(30, jnp.int32))
+    q = jnp.asarray(rng.integers(1, KEY_HI + 5, 50).astype(np.int32))
+    f_s, p_s, h_s = DT.lookup_jit(cfg_s, t, q)
+    f_l, p_l, h_l = DT.lookup_jit(cfg_l, t, q)
+    np.testing.assert_array_equal(np.asarray(f_s), np.asarray(f_l))
+    np.testing.assert_array_equal(np.asarray(p_s), np.asarray(p_l))
+    np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_l))
+    sf_s, sc_s = DT.successor_jit(cfg_s, t, q)
+    sf_l, sc_l = DT.successor_jit(cfg_l, t, q)
+    np.testing.assert_array_equal(np.asarray(sf_s), np.asarray(sf_l))
+    np.testing.assert_array_equal(np.asarray(sc_s), np.asarray(sc_l))
+
+
+def test_engine_selection_validated():
+    """Single-engine backends accept engine="scalar" and reject
+    "lockstep"; unknown engine names are rejected everywhere."""
+    for backend in BACKENDS:
+        if backend in ENGINE_BACKENDS:
+            continue
+        ix = _mk(backend, np.asarray([5, 9], np.int32), engine="scalar")
+        assert ix.engine == "scalar"
+        with pytest.raises(ValueError, match="supports engines"):
+            _mk(backend, np.asarray([5, 9], np.int32), engine="lockstep")
+    with pytest.raises(ValueError, match="supports engines"):
+        make_index("deltatree", engine="warp_drive")
+    # engine typos inside a prebuilt cfg fail at construction, not at
+    # the first read
+    from repro.core.deltatree import TreeConfig
+
+    with pytest.raises(ValueError, match="names engine"):
+        make_index("deltatree", cfg=TreeConfig(height=4, max_dnodes=64,
+                                               engine="locksetp"))
+
+
+def test_late_registered_engine_selectable():
+    """Engines registered after import become selectable by name on
+    engine-aware backends (validation tracks the live registry)."""
+    from repro.core import engine as E
+
+    E.register_engine(E.SearchEngine(
+        name="scalar_twin", lookup=E._scalar_lookup,
+        successor=E._scalar_successor))
+    try:
+        assert "scalar_twin" in supported_engines("deltatree")
+        assert "scalar_twin" not in supported_engines("sorted_array")
+        ix = _mk("deltatree", np.asarray([5, 9], np.int32),
+                 engine="scalar_twin")
+        assert ix.engine == "scalar_twin"
+        f, _ = ix.search(jnp.asarray([5, 6], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(f), [True, False])
+    finally:
+        E._ENGINES.pop("scalar_twin", None)
 
 
 def test_forest_conformance_8dev_subprocess():

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core import TreeConfig, bulk_build, search_jit, update_batch
 from repro.kernels.delta_paged_attention import paged_decode_attention
-from repro.kernels.ops import delta_contains, delta_search
+from repro.kernels.ops import default_interpret, delta_contains, delta_search, delta_walk
 from repro.kernels.ref import ref_delta_search, ref_paged_decode_attention
 
 
@@ -34,8 +34,67 @@ def test_veb_search_kernel_vs_ref(h, m, nvals, qt):
     np.testing.assert_array_equal(np.asarray(dn), np.asarray(rdn))
     found = delta_contains(t.value, t.mark, t.child, t.buf, t.root,
                            jnp.asarray(q), height=h, q_tile=qt)
-    cfound, _ = search_jit(cfg, t, jnp.asarray(q))
+    cfound, chops = search_jit(cfg, t, jnp.asarray(q))
     np.testing.assert_array_equal(np.asarray(found), np.asarray(cfound))
+    # full-walk contract: per-query hop counts equal the scalar engine's
+    # transfer statistic (rounds active == ΔNodes visited)
+    _, _, _, hops, _ = delta_walk(t.value, t.child, t.root, jnp.asarray(q),
+                                  height=h, q_tile=qt)
+    np.testing.assert_array_equal(np.asarray(hops), np.asarray(chops))
+
+
+def test_delta_walk_pad_sentinel_no_alias():
+    """Query batches not divisible by q_tile pad with a provably-missing
+    sentinel and pre-resolved lanes: results must be identical whatever
+    the padding width, and a query equal to the old pad value (EMPTY-
+    adjacent key 1) must still resolve correctly."""
+    rng = np.random.default_rng(7)
+    cfg = TreeConfig(height=4, max_dnodes=512, buf_cap=8)
+    vals = np.unique(
+        np.concatenate([[1], rng.integers(1, 5000, 800)]).astype(np.int32))
+    t = bulk_build(cfg, vals)
+    q = np.concatenate([[1, 2], rng.integers(1, 5000, 41)]).astype(np.int32)
+    outs = [delta_walk(t.value, t.child, t.root, jnp.asarray(q),
+                       height=4, q_tile=qt) for qt in (16, 64, 256)]
+    for other in outs[1:]:
+        for a, b in zip(outs[0], other):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    lv = np.asarray(outs[0][0])
+    assert lv[0] == 1  # key 1 (== EMPTY + 1) found despite padded lanes
+
+
+def test_ref_walk_rows_matches_kernel():
+    """The compiled jnp mirror (the int64-on-TPU production fallback) must
+    match the Pallas kernel's one-round contract exactly, cand included."""
+    from repro.kernels.ref import ref_veb_walk_rows
+    from repro.kernels.veb_search import pad_arena, veb_walk_rows
+
+    rng = np.random.default_rng(3)
+    cfg = TreeConfig(height=5, max_dnodes=2048, buf_cap=16)
+    vals = np.unique(rng.integers(1, 50_000, 2500).astype(np.int32))
+    t = bulk_build(cfg, vals)
+    n_alive = int(np.asarray(t.alive).sum())
+    q = jnp.asarray(rng.integers(1, 50_000, 256).astype(np.int32))
+    vp, cp = pad_arena(t.value, t.child)
+    dns = jnp.asarray(rng.integers(0, n_alive, 256).astype(np.int32))
+    rows, childrows = vp[dns], cp[dns]
+    out_k = veb_walk_rows(rows, childrows, q, height=5, q_tile=256,
+                          interpret=True)
+    out_r = ref_veb_walk_rows(rows, childrows, q, height=5)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_default_interpret_env_override(monkeypatch):
+    """REPRO_PALLAS_INTERPRET overrides the backend auto-detection."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert default_interpret() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert default_interpret() is True
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    import jax
+
+    assert default_interpret() is (jax.default_backend() != "tpu")
 
 
 @pytest.mark.parametrize("b,qh,kvh,d,ps,maxp", [

@@ -38,7 +38,8 @@ UPDATE_CHUNK = 64
 
 
 def add_common_args(ap) -> None:
-    """--seed / --backend / --engine flags shared by every benchmark CLI."""
+    """--seed / --backend / --engine / --smoke flags shared by every
+    benchmark CLI."""
     ap.add_argument("--seed", type=int, default=DEFAULT_SEED,
                     help="root seed for every RNG (recorded in JSON rows)")
     ap.add_argument("--backend", default=None,
@@ -48,6 +49,19 @@ def add_common_args(ap) -> None:
                     help="read-path SearchEngine (scalar|lockstep; default "
                          "scalar). Recorded in every JSON row; backends "
                          "without the engine are skipped explicitly")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: exercise every code path in seconds "
+                         "(CI bitrot guard), numbers meaningless")
+
+
+def resolved_q_tile(ix) -> int:
+    """The lockstep kernel tile this Index would run with (cfg override,
+    else the env/default) — recorded in benchmark JSON rows."""
+    from repro.api.index import cfg_attr
+    from repro.kernels.ops import default_q_tile
+
+    qt = cfg_attr(ix.cfg, "q_tile")
+    return int(qt) if qt else default_q_tile()
 
 
 def engine_supported(backend: str, engine: str | None) -> bool:
@@ -103,12 +117,17 @@ def _chunk_updates(kinds: np.ndarray, keys: np.ndarray,
 def run_index(backend: str, initial: np.ndarray, key_hi: int,
               update_pct: float, batch: int, total_ops: int,
               seed: int = DEFAULT_SEED, engine: str | None = None,
+              maintenance: str | None = None, flush_every: int = 0,
               **make_kw) -> dict:
     """Timed mixed workload against one backend through the Index handle.
 
-    ``engine`` selects the read-path SearchEngine (validated by
-    ``make_index``; None = the backend default, "scalar")."""
-    ix = make_index(backend, initial=initial, engine=engine, **make_kw)
+    ``engine`` selects the read-path SearchEngine, ``maintenance`` the
+    scheduler policy (both validated by ``make_index``; None = backend
+    defaults).  ``flush_every`` > 0 drains deferred/budgeted maintenance
+    every N steps *inside the timed loop* (the serving amortization
+    pattern), so non-eager rows pay their structural work honestly."""
+    ix = make_index(backend, initial=initial, engine=engine,
+                    maintenance=maintenance, **make_kw)
     rng = np.random.default_rng(seed)
     chunked = backend in CHUNKED_BACKENDS
     any_update = update_pct > 0
@@ -144,16 +163,28 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
         ix, found = one_step(ix)
     n_search = n_update = 0
 
+    if flush_every:  # warm the flush compile too, off the clock
+        ix, _ = ix.flush()
+
     steps = max(total_ops // batch, 1)
     t0 = time.perf_counter()
-    for _ in range(steps):
+    for step in range(steps):
         ix, found = one_step(ix, count=True)
+        if flush_every and (step + 1) % flush_every == 0:
+            ix, _ = ix.flush()
+    if flush_every:
+        # drain the trailing window on the clock — otherwise short sweeps
+        # (steps < flush_every) would time non-eager policies with zero
+        # structural work and flatter them vs eager
+        ix, _ = ix.flush()
     jax.block_until_ready(
         [x for x in jax.tree.leaves(ix.state) if hasattr(x, "block_until_ready")])
     found.block_until_ready()
     dt = time.perf_counter() - t0
-    return {"backend": backend, "engine": ix.engine, "seed": seed,
-            "update_pct": update_pct, "batch": batch,
+    return {"backend": backend, "engine": ix.engine,
+            "maintenance": ix.maintenance, "q_tile": resolved_q_tile(ix),
+            "flush_every": flush_every,
+            "seed": seed, "update_pct": update_pct, "batch": batch,
             "ops_per_s": round((n_search + n_update) / dt, 1),
             "seconds": round(dt, 4), "n_search": n_search,
             "n_update": n_update}

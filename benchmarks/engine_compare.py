@@ -56,8 +56,12 @@ def run(initial_size: int, total_ops: int, batches, update_pct: float,
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
+         smoke=False):
     del engine  # this benchmark sweeps both engines by construction
+    if smoke:
+        return run(initial_size=2_000, total_ops=256, batches=(128,),
+                   update_pct=2.0, seed=seed, backend=backend or "deltatree")
     if quick:
         return run(initial_size=20_000, total_ops=2_000, batches=(256,),
                    update_pct=2.0, seed=seed, backend=backend)
@@ -70,4 +74,5 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     add_common_args(ap)
     args = ap.parse_args()
-    main(quick=not args.full, seed=args.seed, backend=args.backend)
+    main(quick=not args.full, seed=args.seed, backend=args.backend,
+         smoke=args.smoke)

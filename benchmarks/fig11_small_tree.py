@@ -23,12 +23,14 @@ DEFAULT_BACKENDS = ("deltatree", "pointer_bst", "sorted_array", "static_veb")
 
 def run(total_ops: int = 50_000, quick: bool = False,
         seed: int = DEFAULT_SEED, backend: str | None = None,
-        engine: str | None = None):
+        engine: str | None = None, smoke: bool = False):
     rng = np.random.default_rng(seed)
     initial = np.unique(rng.integers(1, KEY_MAX, size=INITIAL).astype(np.int32))
     rows = []
     rates = UPDATE_RATES[:3] if quick else UPDATE_RATES
     concs = CONCURRENCY[1:2] if quick else CONCURRENCY
+    if smoke:
+        rates, concs, total_ops = (0, 20), (64,), 192
     names = []
     for name in ((backend,) if backend else DEFAULT_BACKENDS):
         if engine_supported(name, engine):
@@ -51,8 +53,10 @@ def run(total_ops: int = 50_000, quick: bool = False,
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
-    return run(quick=quick, seed=seed, backend=backend, engine=engine)
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
+         smoke=False):
+    return run(quick=quick, seed=seed, backend=backend, engine=engine,
+               smoke=smoke)
 
 
 if __name__ == "__main__":
@@ -61,4 +65,4 @@ if __name__ == "__main__":
     add_common_args(ap)
     args = ap.parse_args()
     main(quick=not args.full, seed=args.seed, backend=args.backend,
-         engine=args.engine)
+         engine=args.engine, smoke=args.smoke)

@@ -22,13 +22,18 @@ DEFAULT_BACKENDS = ("deltatree", "pointer_bst", "sorted_array", "static_veb")
 
 def run(total_ops: int = 30_000, quick: bool = False,
         initial_size: int | None = None, seed: int = DEFAULT_SEED,
-        backend: str | None = None, engine: str | None = None):
+        backend: str | None = None, engine: str | None = None,
+        smoke: bool = False):
     rng = np.random.default_rng(seed)
     n = initial_size or (200_000 if quick else INITIAL)
+    if smoke:
+        n = 10_000
     initial = np.unique(rng.integers(1, KEY_MAX, size=n).astype(np.int32))
     rows = []
     rates = (0, 10) if quick else UPDATE_RATES
     concs = (1024,) if quick else CONCURRENCY
+    if smoke:
+        rates, concs, total_ops = (10,), (256,), 256
     names = []
     for name in ((backend,) if backend else DEFAULT_BACKENDS):
         if engine_supported(name, engine):
@@ -51,8 +56,10 @@ def run(total_ops: int = 30_000, quick: bool = False,
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
-    return run(quick=quick, seed=seed, backend=backend, engine=engine)
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
+         smoke=False):
+    return run(quick=quick, seed=seed, backend=backend, engine=engine,
+               smoke=smoke)
 
 
 if __name__ == "__main__":
@@ -61,4 +68,4 @@ if __name__ == "__main__":
     add_common_args(ap)
     args = ap.parse_args()
     main(quick=not args.full, seed=args.seed, backend=args.backend,
-         engine=args.engine)
+         engine=args.engine, smoke=args.smoke)

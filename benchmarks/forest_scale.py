@@ -66,8 +66,12 @@ def run(shard_counts, batches, initial_size: int, total_ops: int,
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
+         smoke=False):
     del backend  # this sweep is forest-vs-deltatree by construction
+    if smoke:
+        return run(shard_counts=(2,), batches=(64,), initial_size=2_000,
+                   total_ops=128, update_pct=5.0, seed=seed, engine=engine)
     if quick:
         return run(shard_counts=(1, 2, 4), batches=(256, 1024),
                    initial_size=50_000, total_ops=8_000, update_pct=5.0,
@@ -82,4 +86,5 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     add_common_args(ap)
     args = ap.parse_args()
-    main(quick=not args.full, seed=args.seed, engine=args.engine)
+    main(quick=not args.full, seed=args.seed, engine=args.engine,
+         smoke=args.smoke)

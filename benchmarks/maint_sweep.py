@@ -1,0 +1,101 @@
+"""Maintenance-policy sweep: eager vs deferred vs budgeted × scalar vs
+lockstep update descent × update ratios.
+
+Pins down the two claims the repro.maintenance subsystem makes:
+
+1. the *maintenance tax*: how much throughput an update-heavy batch
+   recovers when Rebalance/Expand/Merge is deferred (amortized via
+   ``flush_every``) or budgeted, instead of drained to fixpoint inside
+   every step, and
+2. the *lockstep update descent*: scalar-vs-lockstep row pairs on the same
+   seeded workload (the lockstep row records ``speedup_vs_scalar``) — on
+   CPU the kernel runs in interpret mode so the pair mostly pins parity
+   cost; on TPU it measures the one-DMA-per-round claim on the update path.
+
+Every JSON row records ``engine``, ``maintenance`` and ``q_tile`` (the
+lockstep kernel tile — ``REPRO_PALLAS_QTILE``/``TreeConfig.q_tile``
+override the 256 default).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import (
+    DEFAULT_SEED, add_common_args, backend_kwargs, emit, engine_supported,
+    run_index,
+)
+
+KEY_MAX = 2_000_000
+ENGINES = ("scalar", "lockstep")
+POLICIES = ("eager", "deferred", "budgeted:4")
+DEFAULT_BACKENDS = ("deltatree", "forest")
+FLUSH_EVERY = 16   # non-eager rows drain inside the timed loop
+
+
+def run(initial_size: int, total_ops: int, batch: int, update_pcts,
+        seed: int = DEFAULT_SEED, backend: str | None = None,
+        engine: str | None = None, maintenance: str | None = None):
+    rng = np.random.default_rng(seed)
+    vals = np.unique(rng.integers(1, KEY_MAX, size=initial_size)
+                     .astype(np.int32))
+    rows = []
+    names = (backend,) if backend else DEFAULT_BACKENDS
+    engines = (engine,) if engine else ENGINES
+    policies = (maintenance,) if maintenance else POLICIES
+    for name in names:
+        kw = backend_kwargs(name, vals.size, key_max=KEY_MAX,
+                            total_ops=total_ops)
+        for pol in policies:
+            for u in update_pcts:
+                per_engine = {}
+                for eng in engines:
+                    if not engine_supported(name, eng):
+                        rows.append(emit({
+                            "bench": "maint_sweep", "backend": name,
+                            "engine": eng, "maintenance": pol,
+                            "skipped": "engine unsupported"}))
+                        continue
+                    r = run_index(
+                        name, vals, KEY_MAX, u, batch, total_ops,
+                        seed=seed, engine=eng, maintenance=pol,
+                        flush_every=0 if pol == "eager" else FLUSH_EVERY,
+                        **kw)
+                    per_engine[eng] = r
+                    row = {"bench": "maint_sweep", **r}
+                    if eng == "lockstep" and "scalar" in per_engine:
+                        row["speedup_vs_scalar"] = round(
+                            r["ops_per_s"]
+                            / per_engine["scalar"]["ops_per_s"], 3)
+                    rows.append(emit(row))
+    return rows
+
+
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
+         maintenance=None, smoke=False):
+    if smoke:
+        return run(initial_size=400, total_ops=128, batch=64,
+                   update_pcts=(20.0,), seed=seed,
+                   backend=backend or "deltatree", engine=engine,
+                   maintenance=maintenance)
+    if quick:
+        return run(initial_size=20_000, total_ops=2_000, batch=256,
+                   update_pcts=(2.0, 20.0), seed=seed, backend=backend,
+                   engine=engine, maintenance=maintenance)
+    return run(initial_size=200_000, total_ops=20_000, batch=256,
+               update_pcts=(2.0, 20.0, 50.0), seed=seed, backend=backend,
+               engine=engine, maintenance=maintenance)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--maintenance", default=None,
+                    help="run only this policy (eager|deferred|budgeted:K; "
+                         "default: sweep all three)")
+    add_common_args(ap)
+    args = ap.parse_args()
+    main(quick=not args.full, seed=args.seed, backend=args.backend,
+         engine=args.engine, maintenance=args.maintenance, smoke=args.smoke)

@@ -2,31 +2,73 @@
 # through the `repro.api.make_index` factory and prints one JSON row per
 # result line (each row records `seed` + `backend` for reproducibility).
 # Default is the quick profile (CPU-friendly); --full is the paper-scale
-# sweep; --backend narrows every benchmark to one registered backend;
-# --seed reseeds every RNG.
+# sweep; --smoke runs everything at tiny sizes (CI bitrot guard);
+# --backend narrows every benchmark to one registered backend; --seed
+# reseeds every RNG.  All rows from one invocation are additionally
+# consolidated into BENCH_<timestamp>.json at the repo root — every row
+# stamped with its suite, backend, engine and maintenance policy — so the
+# perf trajectory stays recorded across PRs.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _in_x64_subprocess(module: str, quick: bool, seed: int,
-                       backend: str | None, engine: str | None):
-    """serve bench needs JAX_ENABLE_X64; run isolated."""
+                       backend: str | None, engine: str | None,
+                       smoke: bool = False):
+    """serve bench needs JAX_ENABLE_X64; run isolated.  Returns the rows
+    parsed back off the child's stdout (one JSON object per line)."""
     env = dict(os.environ)
     env["JAX_ENABLE_X64"] = "1"
     env.setdefault("PYTHONPATH", "src")
     code = (f"from {module} import main; "
             f"main(quick={quick}, seed={seed}, backend={backend!r}, "
-            f"engine={engine!r})")
+            f"engine={engine!r}, smoke={smoke})")
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True)
     sys.stdout.write(out.stdout)
     if out.returncode != 0:
         sys.stderr.write(out.stderr)
         raise RuntimeError(f"{module} failed")
+    rows = []
+    for line in out.stdout.splitlines():
+        line = line.strip()
+        if line.startswith("{"):
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return rows
+
+
+def _consolidate(rows: list, args: dict) -> str:
+    """Write BENCH_<timestamp>.json at the repo root: run metadata plus
+    every row stamped with suite/backend/engine/maintenance.  Smoke runs
+    get the gitignored ``BENCH_SMOKE_`` prefix — their numbers are
+    meaningless and must not pollute the committed perf trajectory."""
+    stamped = []
+    for row in rows:
+        r = dict(row)
+        r.setdefault("suite", r.get("bench", "unknown"))
+        r.setdefault("backend", None)
+        r.setdefault("engine", None)
+        r.setdefault("maintenance", None if r.get("skipped") else "eager")
+        stamped.append(r)
+    ts = time.strftime("%Y%m%d_%H%M%S")
+    prefix = "BENCH_SMOKE_" if args.get("smoke") else "BENCH_"
+    path = os.path.join(REPO_ROOT, f"{prefix}{ts}.json")
+    with open(path, "w") as f:
+        json.dump({"timestamp": ts, "args": args, "rows": stamped}, f,
+                  indent=1)
+    print(f"# consolidated {len(stamped)} rows -> {path}", flush=True)
+    return path
 
 
 def main() -> None:
@@ -36,35 +78,62 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="fig11|fig12|table1|ub_sweep|serve|forest|engines")
+                    help="fig11|fig12|table1|ub_sweep|serve|forest|engines"
+                         "|maint")
+    ap.add_argument("--maintenance", default=None,
+                    help="maint suite: run only this policy")
     add_common_args(ap)
     args, _ = ap.parse_known_args()
     quick = not args.full
     seed, backend, engine = args.seed, args.backend, args.engine
+    smoke = args.smoke
 
     from benchmarks import engine_compare, fig11_small_tree, fig12_big_tree
-    from benchmarks import forest_scale, table1_transfers, ub_sweep
+    from benchmarks import forest_scale, maint_sweep, table1_transfers
+    from benchmarks import ub_sweep
 
     todo = args.only.split(",") if args.only else [
-        "table1", "ub_sweep", "fig11", "fig12", "serve", "forest", "engines"]
+        "table1", "ub_sweep", "fig11", "fig12", "serve", "forest",
+        "engines", "maint"]
+    rows: list = []
+
+    def add(suite, got):
+        if not got:
+            return
+        if isinstance(got, dict):
+            got = [got]
+        for r in got:
+            r = dict(r)
+            r["suite"] = suite
+            rows.append(r)
+
+    common = dict(quick=quick, seed=seed, backend=backend, engine=engine,
+                  smoke=smoke)
     if "table1" in todo:
-        table1_transfers.main(quick=quick, seed=seed, backend=backend,
-                              engine=engine)
+        add("table1", table1_transfers.main(**common))
     if "ub_sweep" in todo:
-        ub_sweep.main(quick=quick, seed=seed, backend=backend, engine=engine)
+        add("ub_sweep", ub_sweep.main(**common))
     if "fig11" in todo:
-        fig11_small_tree.main(quick=quick, seed=seed, backend=backend,
-                              engine=engine)
+        add("fig11", fig11_small_tree.main(**common))
     if "fig12" in todo:
-        fig12_big_tree.main(quick=quick, seed=seed, backend=backend,
-                            engine=engine)
+        add("fig12", fig12_big_tree.main(**common))
     if "serve" in todo:
-        _in_x64_subprocess("benchmarks.serve_paged", quick, seed, backend,
-                           engine)
+        add("serve", _in_x64_subprocess("benchmarks.serve_paged", quick,
+                                        seed, backend, engine, smoke))
     if "forest" in todo:
-        forest_scale.main(quick=quick, seed=seed, engine=engine)
+        add("forest", forest_scale.main(quick=quick, seed=seed,
+                                        engine=engine, smoke=smoke))
     if "engines" in todo:
-        engine_compare.main(quick=quick, seed=seed, backend=backend)
+        add("engines", engine_compare.main(quick=quick, seed=seed,
+                                           backend=backend, smoke=smoke))
+    if "maint" in todo:
+        add("maint", maint_sweep.main(quick=quick, seed=seed,
+                                      backend=backend, engine=engine,
+                                      maintenance=args.maintenance,
+                                      smoke=smoke))
+    _consolidate(rows, dict(full=args.full, smoke=smoke, seed=seed,
+                            backend=backend, engine=engine,
+                            only=args.only))
 
 
 if __name__ == '__main__':

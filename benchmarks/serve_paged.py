@@ -75,9 +75,10 @@ def run(steps: int = 10, seed: int = DEFAULT_SEED,
             "hops_per_search": round(s["hops"] / max(s["searches"], 1), 2)}
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
-    return emit(run(steps=5 if quick else 20, seed=seed, backend=backend,
-                    engine=engine))
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
+         smoke=False):
+    return emit(run(steps=2 if smoke else (5 if quick else 20), seed=seed,
+                    backend=backend, engine=engine))
 
 
 if __name__ == "__main__":
@@ -86,4 +87,4 @@ if __name__ == "__main__":
     add_common_args(ap)
     args = ap.parse_args()
     main(quick=not args.full, seed=args.seed, backend=args.backend,
-         engine=args.engine)
+         engine=args.engine, smoke=args.smoke)

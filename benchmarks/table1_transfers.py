@@ -82,7 +82,11 @@ def run(n_queries: int = 300, initial_size: int = INITIAL,
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
+         smoke=False):
+    if smoke:
+        return run(n_queries=20, initial_size=1 << 12, seed=seed,
+                   backend=backend, engine=engine)
     return run(n_queries=150 if quick else 500,
                initial_size=(1 << 17) if quick else INITIAL,
                seed=seed, backend=backend, engine=engine)
@@ -94,4 +98,4 @@ if __name__ == "__main__":
     add_common_args(ap)
     args = ap.parse_args()
     main(quick=not args.full, seed=args.seed, backend=args.backend,
-         engine=args.engine)
+         engine=args.engine, smoke=args.smoke)

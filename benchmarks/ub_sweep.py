@@ -50,7 +50,11 @@ def run(initial_size: int = 200_000, total_ops: int = 20_000,
     return rows
 
 
-def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None):
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
+         smoke=False):
+    if smoke:
+        return run(initial_size=5_000, total_ops=256, seed=seed,
+                   backend=backend, engine=engine)
     return run(initial_size=100_000 if quick else 500_000,
                total_ops=10_000 if quick else 50_000,
                seed=seed, backend=backend, engine=engine)
@@ -62,4 +66,4 @@ if __name__ == "__main__":
     add_common_args(ap)
     args = ap.parse_args()
     main(quick=not args.full, seed=args.seed, backend=args.backend,
-         engine=args.engine)
+         engine=args.engine, smoke=args.smoke)

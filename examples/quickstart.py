@@ -61,6 +61,16 @@ def main():
     print(f"transfer model: {np.mean(sample):.2f} ΔNode transfers/search "
           f"for N={keys.size:,}, UB=127")
 
+    # maintenance policies: budget (or defer) the structural work — the
+    # update returns a MaintenanceStats pytree; flush() drains to fixpoint
+    ixb = make_index("deltatree", initial=keys[:10_000], height=7,
+                     max_dnodes=4096, buf_cap=32, maintenance="budgeted:4")
+    ixb, ok, stats = ixb.update(OpBatch.inserts(
+        rng.integers(1, 5_000_000, size=256).astype(np.int32)))
+    print(f"budgeted:4 update -> {stats.asdict()}")
+    ixb, stats = ixb.flush()
+    print(f"flush -> {stats.asdict()} (I5 restored)")
+
 
 if __name__ == "__main__":
     main()

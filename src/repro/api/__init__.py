@@ -6,6 +6,8 @@ The uniform dictionary surface (DESIGN.md §5):
     found, hops = ix.search(queries)               # wait-free snapshot read
     ix, results = ix.insert_delete(OpBatch.inserts(new_keys))
     found, succ = ix.successor(queries)            # capability-gated
+    ix, results, stats = ix.update(batch)          # + MaintenanceStats
+    ix, stats = ix.flush()                         # drain deferred repairs
 
 Backends register by name (``deltatree``, ``forest``, ``sorted_array``,
 ``pointer_bst``, ``static_veb``); ``Capability`` declares what each
@@ -27,6 +29,7 @@ from repro.api.registry import (
     make_index,
     register_backend,
     supported_engines,
+    supported_maintenance,
 )
 from repro.api import backends as _backends  # noqa: F401  (registers built-ins)
 
@@ -45,4 +48,5 @@ __all__ = [
     "make_index",
     "register_backend",
     "supported_engines",
+    "supported_maintenance",
 ]

@@ -49,15 +49,14 @@ def _dt_make(initial, payloads, cfg=None, **kw):
 
 
 def _dt_update(cfg, t, batch: OpBatch):
-    t, res, _ = DT.update_batch(cfg, t, batch.kinds, batch.keys,
-                                batch.payloads)
-    return t, res
+    return DT.update_batch(cfg, t, batch.kinds, batch.keys, batch.payloads)
 
 
 def _dt_size(cfg, t) -> int:
-    # I5: buffers drain to empty inside every update step, so nlive+bcount
-    # over live arenas is exact between steps (cross-checked vs the oracle
-    # by the conformance suite).
+    # I5/I5': between steps every live item is a live leaf or a buffered
+    # entry (never both — inserts dedup against the buffer), so
+    # nlive+bcount over live arenas is exact under every maintenance
+    # policy (cross-checked vs the oracle by the conformance suite).
     return int(jnp.sum(jnp.where(t.alive, t.nlive + t.bcount, 0)))
 
 
@@ -65,7 +64,8 @@ register_backend(BackendSpec(
     name="deltatree",
     make=_dt_make,
     capability=lambda cfg: Capability(
-        map_mode=cfg.payload_bits > 0, successor=True, sharded=False),
+        map_mode=cfg.payload_bits > 0, successor=True, sharded=False,
+        deferred_maintenance=True),
     search=DT.search_jit,
     lookup=DT.lookup_jit,
     update=_dt_update,
@@ -74,7 +74,9 @@ register_backend(BackendSpec(
     size=_dt_size,
     touch=TR.delta_touch_fn,
     alloc_failed=lambda cfg, t: bool(t.alloc_fail),
+    flush=DT.flush,
     engines=("*",),   # reads dispatch on cfg.engine: any registered engine
+    maintenance=("*",),   # scheduler dispatch on cfg.maintenance: any policy
 ))
 
 
@@ -105,9 +107,7 @@ def _forest_make(initial, payloads, cfg=None, splits=None, **kw):
 
 
 def _forest_update(cfg, f, batch: OpBatch):
-    f, res, _ = F.update_batch(cfg, f, batch.kinds, batch.keys,
-                               batch.payloads)
-    return f, res
+    return F.update_batch(cfg, f, batch.kinds, batch.keys, batch.payloads)
 
 
 def _forest_size(cfg, f) -> int:
@@ -119,7 +119,8 @@ register_backend(BackendSpec(
     name="forest",
     make=_forest_make,
     capability=lambda cfg: Capability(
-        map_mode=cfg.tree.payload_bits > 0, successor=True, sharded=True),
+        map_mode=cfg.tree.payload_bits > 0, successor=True, sharded=True,
+        deferred_maintenance=True),
     search=F.search_batch,
     lookup=F.lookup_batch,
     update=_forest_update,
@@ -127,7 +128,9 @@ register_backend(BackendSpec(
     live_items=F.live_items,
     size=_forest_size,
     alloc_failed=lambda cfg, f: F.alloc_failed(f),
+    flush=F.flush,
     engines=("*",),   # per-shard reads dispatch on cfg.tree.engine
+    maintenance=("*",),   # per-shard scheduler dispatch on cfg.tree.maintenance
 ))
 
 
@@ -156,7 +159,7 @@ def _sa_search(state, keys):
 def _sa_update(cfg, state, batch: OpBatch):
     kinds, keys, is_update = batch.mask_searches()
     state, res = BL.SortedArray.update(state, kinds, keys)
-    return state, res & is_update
+    return state, res & is_update, None  # no maintenance scheduler
 
 
 @jax.jit
@@ -211,7 +214,7 @@ def _bst_search(state, keys):
 def _bst_update(cfg, state, batch: OpBatch):
     kinds, keys, is_update = batch.mask_searches()
     state, res = BL.PointerBST.update(state, kinds, keys)
-    return state, res & is_update
+    return state, res & is_update, None  # no maintenance scheduler
 
 
 def _bst_live_items(cfg, state):
@@ -268,7 +271,7 @@ def _sv_update(cfg, state, batch: OpBatch):
             state = BL.StaticVEB.build(BL.StaticVEB.to_sorted(state),
                                        height=cfg.height)
         res[mask] = np.asarray(sub)
-    return state, jnp.asarray(res)
+    return state, jnp.asarray(res), None  # no maintenance scheduler
 
 
 def _sv_live_items(cfg, state):

@@ -34,10 +34,21 @@ class Capability:
     successor: bool = False   # ordered successor queries
     sharded: bool = False     # state fans out over a device mesh
     updates: bool = True      # insert_delete supported at all
+    deferred_maintenance: bool = False  # non-eager policies + flush()
 
 
 class CapabilityError(NotImplementedError):
     """Raised when an Index method is not in the backend's Capability."""
+
+
+def cfg_attr(cfg, name: str, default=None):
+    """Probe a config knob on ``cfg`` or its nested ``cfg.tree`` (the
+    forest/pager configs wrap a TreeConfig) — the one resolution rule for
+    ``engine`` / ``maintenance`` / ``q_tile`` style knobs."""
+    v = getattr(cfg, name, None)
+    if v is None:
+        v = getattr(getattr(cfg, "tree", None), name, None)
+    return default if v is None else v
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,20 +70,29 @@ class BackendSpec:
     ``make_index(..., engine=)`` rejects anything else; a backend with
     its own private engines declares them literally.  Resolve with
     ``repro.api.supported_engines``.
+
+    ``maintenance`` analogously lists the scheduler policy *kinds*
+    (``repro.maintenance.KINDS``) the backend accepts via
+    ``make_index(maintenance=)``; ``("*",)`` = every kind the scheduler
+    knows.  ``update`` returns a third element — a ``MaintenanceStats``
+    pytree, or None for backends without a maintenance scheduler — and
+    ``flush`` (optional) drains deferred maintenance to fixpoint.
     """
 
     name: str
     make: Callable[..., tuple[Any, Any]]        # (initial, payloads, **kw)
     capability: Callable[[Any], Capability]     # cfg -> Capability
     search: Callable[..., Any]                  # (cfg, state, keys) -> (found, hops)
-    update: Callable[..., Any]                  # (cfg, state, OpBatch) -> (state, results)
+    update: Callable[..., Any]                  # (cfg, state, OpBatch) -> (state, results, stats|None)
     live_items: Callable[..., Any]              # (cfg, state) -> [(key, payload)]
     size: Callable[..., int]                    # (cfg, state) -> int
     lookup: Callable[..., Any] | None = None    # (cfg, state, keys) -> (found, payload, hops)
     successor: Callable[..., Any] | None = None  # (cfg, state, keys) -> (found, succ)
     touch: Callable[..., Any] | None = None     # (cfg, state) -> (key -> [flat indices])
     alloc_failed: Callable[..., bool] | None = None  # (cfg, state) -> bool
+    flush: Callable[..., Any] | None = None     # (cfg, state) -> (state, stats)
     engines: tuple[str, ...] = ("scalar",)      # selectable read engines
+    maintenance: tuple[str, ...] = ("eager",)   # selectable policy kinds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,11 +137,13 @@ class Index:
     @property
     def engine(self) -> str:
         """Active SearchEngine name ("scalar" for single-engine backends)."""
-        cfg = self.spec.cfg
-        eng = getattr(cfg, "engine", None)
-        if eng is None:
-            eng = getattr(getattr(cfg, "tree", None), "engine", None)
-        return eng or "scalar"
+        return cfg_attr(self.spec.cfg, "engine") or "scalar"
+
+    @property
+    def maintenance(self) -> str:
+        """Active maintenance policy string ("eager" when the backend has
+        no maintenance scheduler)."""
+        return cfg_attr(self.spec.cfg, "maintenance") or "eager"
 
     def _require(self, flag: str, hook) -> None:
         if not getattr(self.capability, flag) or hook is None:
@@ -152,11 +174,30 @@ class Index:
 
         OP_SEARCH rows are no-ops with result False.  The old handle's
         state may be donated — always rebind to the returned Index.
+        (`update` is the same call keeping the MaintenanceStats.)
         """
+        ix, results, _ = self.update(batch)
+        return ix, results
+
+    def update(self, batch: OpBatch):
+        """`insert_delete` returning telemetry: (new Index, results[K],
+        MaintenanceStats | None) — stats is None for backends without a
+        maintenance scheduler (baselines)."""
         self._require("updates", self.spec.backend.update)
-        state, results = self.spec.backend.update(
+        state, results, stats = self.spec.backend.update(
             self.spec.cfg, self.state, batch)
-        return Index(self.spec, state), results
+        return Index(self.spec, state), results, stats
+
+    def flush(self):
+        """Drain pending maintenance to fixpoint (restores invariant I5
+        after ``deferred``/``budgeted`` update batches).  Returns
+        (new Index, MaintenanceStats | None); a no-op (stats None) for
+        backends without a maintenance scheduler.  The old handle's state
+        may be donated — always rebind."""
+        if self.spec.backend.flush is None:
+            return self, None
+        state, stats = self.spec.backend.flush(self.spec.cfg, self.state)
+        return Index(self.spec, state), stats
 
     # ---- host-side diagnostics ----
 

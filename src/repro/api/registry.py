@@ -36,6 +36,20 @@ def available_backends() -> list[str]:
     return sorted(_REGISTRY)
 
 
+def supported_maintenance(backend: str) -> tuple[str, ...]:
+    """Maintenance policy *kinds* ``backend`` accepts via ``maintenance=``.
+
+    ``("*",)`` expands to every kind the scheduler knows
+    (``repro.maintenance.KINDS``); literal entries pass through."""
+    spec = get_backend(backend)
+    if "*" not in spec.maintenance:
+        return spec.maintenance
+    from repro.maintenance import KINDS
+
+    literal = [m for m in spec.maintenance if m != "*"]
+    return tuple(dict.fromkeys(literal + list(KINDS)))
+
+
 def supported_engines(backend: str) -> tuple[str, ...]:
     """Live SearchEngine names ``backend`` accepts via ``engine=``.
 
@@ -53,13 +67,17 @@ def supported_engines(backend: str) -> tuple[str, ...]:
 
 
 def make_index(backend: str = "deltatree", *, initial=None, payloads=None,
-               engine: str | None = None, **kwargs) -> Index:
+               engine: str | None = None, maintenance: str | None = None,
+               **kwargs) -> Index:
     """Build an Index: ``backend`` picks the registry entry, ``initial``
     (unique keys) and ``payloads`` seed a bulk build (empty when None),
     ``engine`` selects the read-path SearchEngine ("scalar" / "lockstep";
-    validated against the backend's declared ``engines``), remaining
-    kwargs go to the backend's config (e.g. ``height=7`` or a prebuilt
-    ``cfg=...``)."""
+    validated against the backend's declared ``engines``), ``maintenance``
+    the scheduler policy ("eager" / "deferred" / "budgeted:K"; validated
+    against the backend's declared policy kinds), remaining kwargs go to
+    the backend's config (e.g. ``height=7`` or a prebuilt ``cfg=...``)."""
+    from repro.maintenance import parse_policy
+
     spec = get_backend(backend)
     if engine is not None:
         engines = supported_engines(backend)
@@ -71,6 +89,15 @@ def make_index(backend: str = "deltatree", *, initial=None, payloads=None,
             # engine-aware backends thread the name into their TreeConfig;
             # single-engine backends just validated the default above
             kwargs["engine"] = engine
+    if maintenance is not None:
+        pol = parse_policy(maintenance)   # ValueError on garbage specs
+        kinds = supported_maintenance(backend)
+        if pol.kind not in kinds:
+            raise ValueError(
+                f"backend {backend!r} supports maintenance policies "
+                f"{kinds}, not {maintenance!r}")
+        if spec.maintenance != ("eager",):
+            kwargs["maintenance"] = str(pol)
     cfg, state = spec.make(initial, payloads, **kwargs)
     ix = Index(IndexSpec(backend=spec, cfg=cfg), state)
     if ix.engine not in supported_engines(backend):
@@ -80,6 +107,13 @@ def make_index(backend: str = "deltatree", *, initial=None, payloads=None,
         raise ValueError(
             f"backend {backend!r} config names engine {ix.engine!r}; "
             f"supported: {supported_engines(backend)}")
+    # same early validation for policies smuggled in via a prebuilt cfg=
+    ix_pol = parse_policy(ix.maintenance)
+    if ix_pol.kind not in supported_maintenance(backend):
+        raise ValueError(
+            f"backend {backend!r} config names maintenance policy "
+            f"{ix.maintenance!r}; supported kinds: "
+            f"{supported_maintenance(backend)}")
     if payloads is not None and not ix.capability.map_mode:
         raise ValueError(
             f"backend {backend!r} with {ix.capability} stores no payloads; "

@@ -55,6 +55,8 @@ __all__ = [
     "search_jit",
     "update_batch",
     "update_batch_impl",
+    "flush",
+    "flush_impl",
     "OP_SEARCH",
     "OP_INSERT",
     "OP_DELETE",

@@ -41,8 +41,13 @@ tests/test_deltatree.py):
       (the value is a cosmetic marker; routing hops unconditionally).
   I4. in-order traversal of live leaves is strictly sorted and consistent
       with every router on the path.
-  I5. after `update_batch` returns, every buffer is empty (maintenance ran
-      to fixpoint).
+  I5. under the default ``maintenance="eager"`` policy, after
+      `update_batch` returns every buffer is empty (maintenance ran to
+      fixpoint).  Non-eager policies (``repro.maintenance``) relax this to
+  I5'. every buffered value's root descent lands in the ΔNode whose buffer
+      holds it — which is what keeps `searchnode`'s final-ΔNode buffer
+      probe (and hence every wait-free read) correct over pending items;
+      `flush` restores I5.
 """
 
 from __future__ import annotations
@@ -74,7 +79,16 @@ class TreeConfig:
     engine:       which registered SearchEngine serves the read path —
                   "scalar" (vmap-of-while_loop reference) or "lockstep"
                   (Pallas vEB walk kernel in frontier rounds); see
-                  ``repro.core.engine``.
+                  ``repro.core.engine``.  The lockstep engine also routes
+                  the update path's position-finding through the kernel
+                  (one frontier pass per round).
+    maintenance:  maintenance policy string — "eager" (drain to fixpoint
+                  inside every update step; the paper/default semantics),
+                  "deferred" (maintenance only on ``flush``), or
+                  "budgeted:K" (at most K ΔNode repairs per batch); see
+                  ``repro.maintenance``.
+    q_tile:       lockstep kernel query tile; 0 = auto (the
+                  ``REPRO_PALLAS_QTILE`` env override, else 256).
     """
 
     height: int = 7           # UB = 127, the paper's best (page-sized) ΔNode
@@ -84,6 +98,15 @@ class TreeConfig:
     payload_bits: int = 0
     parallel_updates: bool = True   # vectorized non-conflicting fast path
     engine: str = "scalar"    # read-path SearchEngine (core.engine registry)
+    maintenance: str = "eager"  # scheduler policy (repro.maintenance)
+    q_tile: int = 0           # lockstep kernel tile (0 = env/default)
+
+    @property
+    def maintenance_policy(self):
+        """Parsed ``MaintenancePolicy`` (raises ValueError on a bad spec)."""
+        from repro.maintenance.policy import parse_policy
+
+        return parse_policy(self.maintenance)
 
     @property
     def ub(self) -> int:
@@ -451,12 +474,20 @@ def _grow_leaf(cfg: TreeConfig, t: DeltaTree, dn, b, pv):
     return t
 
 
-def _insert_op(cfg: TreeConfig, t: DeltaTree, key, payload):
-    """One INSERTNODE in batch order. Returns (t, success, pending)."""
+def _insert_op(cfg: TreeConfig, t: DeltaTree, key, payload,
+               dn0=None, b0=None):
+    """One INSERTNODE in batch order. Returns (t, success, pending).
+
+    ``(dn0, b0)`` is an optional descent hint — a position known to be on
+    the key's root descent path (the lockstep update path passes the
+    round-start frontier position; within an op phase structure only grows
+    downward, so descending from the hint reaches the true endpoint)."""
     pos = _pos(cfg)
     q = cfg.qpack(key)
     pv = cfg.pack(key, payload)
-    dn, b, _ = _descend(cfg, t, q, t.root, 1)
+    if dn0 is None:
+        dn0, b0 = t.root, 1
+    dn, b, _ = _descend(cfg, t, q, dn0, b0)
     leaf_val = t.value[dn, pos[b]]
     leaf_mark = t.mark[dn, pos[b]]
     leaf_hit = (leaf_val != EMPTY) & (cfg.key_of(leaf_val) == key)
@@ -493,18 +524,26 @@ def _insert_op(cfg: TreeConfig, t: DeltaTree, key, payload):
 
         return jax.lax.cond(in_buf, dup, app, t)
 
+    # a key resident in this ΔNode's buffer routes to case_buffer (dup)
+    # whatever leaf kind the descent ended on — under I5' carried items
+    # may surface at non-bottom or EMPTY leaves of an Expanded child
     branch = jnp.where(
         leaf_hit, 0,
-        jnp.where(leaf_val == EMPTY, 1, jnp.where(b < cfg.bottom0, 2, 3)),
+        jnp.where(in_buf, 3,
+                  jnp.where(leaf_val == EMPTY, 1,
+                            jnp.where(b < cfg.bottom0, 2, 3))),
     )
     return jax.lax.switch(branch, [case_dup, case_place, case_grow, case_buffer], t)
 
 
-def _delete_op(cfg: TreeConfig, t: DeltaTree, key):
-    """One DELETENODE in batch order (mark-delete, paper Fig. 9 l.18)."""
+def _delete_op(cfg: TreeConfig, t: DeltaTree, key, dn0=None, b0=None):
+    """One DELETENODE in batch order (mark-delete, paper Fig. 9 l.18).
+    ``(dn0, b0)`` is an optional descent hint, as in `_insert_op`."""
     pos = _pos(cfg)
     q = cfg.qpack(key)
-    dn, b, _ = _descend(cfg, t, q, t.root, 1)
+    if dn0 is None:
+        dn0, b0 = t.root, 1
+    dn, b, _ = _descend(cfg, t, q, dn0, b0)
     leaf_val = t.value[dn, pos[b]]
     leaf_mark = t.mark[dn, pos[b]]
     leaf_hit = (leaf_val != EMPTY) & (cfg.key_of(leaf_val) == key)
@@ -540,14 +579,17 @@ def _delete_op(cfg: TreeConfig, t: DeltaTree, key):
 # --------------------------------------------------------------------------
 
 
-def _process_ins(cfg: TreeConfig, t: DeltaTree, dn) -> DeltaTree:
+def _process_ins(cfg: TreeConfig, t: DeltaTree, dn):
+    """Insert-side repair of ΔNode ``dn`` (Rebalance or Expand).  Returns
+    (t, rebuilds, expands) — the int32 deltas feed ``MaintenanceStats``
+    (expands counts child ΔNodes allocated)."""
     dn = jnp.asarray(dn, jnp.int32)
     pos = _pos(cfg)
     total = t.nlive[dn] + t.bcount[dn]
     childless_small = (t.nchild[dn] == 0) & (total <= cfg.half_cap)
 
     def do_rebalance(t):
-        return _rebalance(cfg, t, dn)
+        return _rebalance(cfg, t, dn), jnp.int32(1), jnp.int32(0)
 
     def do_expand(t):
         # Route every buffered value one hop toward its home: place/grow in
@@ -633,8 +675,10 @@ def _process_ins(cfg: TreeConfig, t: DeltaTree, dn) -> DeltaTree:
 
             return jax.lax.cond(pv == EMPTY, lambda t: t, handle, t)
 
+        ft0 = t.free_top
         t = jax.lax.fori_loop(0, cfg.buf_cap, body, t)
-        return t._replace(ins_flag=t.ins_flag.at[dn].set(t.bcount[dn] > 0))
+        t = t._replace(ins_flag=t.ins_flag.at[dn].set(t.bcount[dn] > 0))
+        return t, jnp.int32(0), (ft0 - t.free_top).astype(jnp.int32)
 
     return jax.lax.cond(childless_small, do_rebalance, do_expand, t)
 
@@ -644,7 +688,9 @@ def _process_ins(cfg: TreeConfig, t: DeltaTree, dn) -> DeltaTree:
 # --------------------------------------------------------------------------
 
 
-def _process_del(cfg: TreeConfig, t: DeltaTree, dn) -> DeltaTree:
+def _process_del(cfg: TreeConfig, t: DeltaTree, dn):
+    """Delete-side repair of ΔNode ``dn`` (Merge).  Returns (t, merged) —
+    the int32 delta feeds ``MaintenanceStats``."""
     dn = jnp.asarray(dn, jnp.int32)
     pos = _pos(cfg)
     t = t._replace(del_flag=t.del_flag.at[dn].set(False))
@@ -727,11 +773,11 @@ def _process_del(cfg: TreeConfig, t: DeltaTree, dn) -> DeltaTree:
                 # a live sibling leaf value was absorbed downward
                 nlive=t.nlive.at[p].add(-sib_m * (~sib_is_child).astype(jnp.int32)),
             )
-            return t
+            return t, jnp.int32(1)
 
-        return jax.lax.cond(fits, do, lambda t: t, t)
+        return jax.lax.cond(fits, do, lambda t: (t, jnp.int32(0)), t)
 
-    return jax.lax.cond(eligible, merge, lambda t: t, t)
+    return jax.lax.cond(eligible, merge, lambda t: (t, jnp.int32(0)), t)
 
 
 # --------------------------------------------------------------------------
@@ -742,25 +788,30 @@ OP_SEARCH, OP_INSERT, OP_DELETE = 0, 1, 2
 
 
 def _parallel_fastpath(cfg: TreeConfig, t: DeltaTree, kinds, keys, payloads,
-                       results, pending):
+                       results, pending, dns, bs):
     """Vectorized first pass: apply all *non-conflicting* updates with
     batched scatters — the SPMD realization of the paper's non-blocking
     concurrency (ops in distinct ΔNodes/leaves proceed "in parallel";
     conflicting ops lose the CAS and retry via the sequential path).
 
+    ``(dns, bs)`` are the batch's frontier leaf positions, computed by the
+    scheduler once per round (one `kernels.ops.delta_walk` pass under the
+    lockstep engine, the vmapped scalar descent otherwise).
+
     Handled vectorized: delete-mark, delete-miss, insert-place, insert-grow,
-    insert-revive, insert-dup.  Left pending: bottom-leaf buffered inserts
-    (the paper's lock/buffer path) and any op conflicting on key or leaf
+    insert-revive, insert-dup (leaf or buffer).  Left pending: bottom-leaf
+    buffered inserts (the paper's lock/buffer path), ops on keys resident
+    in the final ΔNode's overflow buffer (mid-batch inserts, or items
+    carried by a non-eager maintenance policy — invariant I5' puts a
+    buffered key's descent in its holder, so one probe of the final
+    ΔNode's buffer row suffices), and any op conflicting on key or leaf
     position (the earliest-in-batch op wins, preserving a valid
-    linearization).  Buffers are empty on entry (invariant I5), so buffer
-    probes are unnecessary.
+    linearization).
     """
     pos = _pos(cfg)
     k = keys.shape[0]
     m = cfg.max_dnodes
-    q = jax.vmap(cfg.qpack)(keys)
     pv = jax.vmap(cfg.pack)(keys, payloads)
-    dns, bs, _ = jax.vmap(lambda qq: _descend(cfg, t, qq, t.root, 1))(q)
 
     # earliest-in-batch wins per duplicate key / duplicate leaf slot
     def later_duplicate(ids):
@@ -780,15 +831,24 @@ def _parallel_fastpath(cfg: TreeConfig, t: DeltaTree, kinds, keys, payloads,
     at_bottom = bs >= cfg.bottom0
     is_ins = kinds == OP_INSERT
     is_del = kinds == OP_DELETE
+    # final-ΔNode buffer probe: a buffered key may surface at ANY leaf
+    # kind (a freshly-Expanded child seeds its buffer while its only leaf
+    # sits at the root position), so every miss consults the buffer row
+    brow = t.buf[dns]
+    in_buf = jnp.any((brow != EMPTY) & (cfg.key_of(brow) == keys[:, None]),
+                     axis=1)
 
     del_ok = elig & is_del & leaf_hit & ~leaf_mark
-    # a miss at a BOTTOM leaf may still hit the ΔNode's buffer (mid-round
-    # inserts of this batch) — defer those to the sequential path
-    del_miss = elig & is_del & (leaf_hit & leaf_mark | (~leaf_hit & ~at_bottom))
+    # a buffered hit needs the sequential path (dynamic-slot clear); a miss
+    # at a BOTTOM leaf may still race mid-round inserts — defer those too
+    del_miss = elig & is_del & (leaf_hit & leaf_mark
+                                | (~leaf_hit & ~at_bottom & ~in_buf))
     ins_dup = elig & is_ins & leaf_hit & ~leaf_mark
+    ins_bufdup = elig & is_ins & ~leaf_hit & in_buf
     ins_revive = elig & is_ins & leaf_hit & leaf_mark
-    ins_place = elig & is_ins & (leaf_val == EMPTY)
-    ins_grow = elig & is_ins & ~leaf_hit & (leaf_val != EMPTY) & ~at_bottom
+    ins_place = elig & is_ins & (leaf_val == EMPTY) & ~in_buf
+    ins_grow = (elig & is_ins & ~leaf_hit & ~in_buf
+                & (leaf_val != EMPTY) & ~at_bottom)
 
     drop = jnp.int32(m)  # OOB row -> scatter mode="drop"
 
@@ -821,7 +881,8 @@ def _parallel_fastpath(cfg: TreeConfig, t: DeltaTree, kinds, keys, payloads,
         dlt, jnp.where(elig, dns, drop), num_segments=m + 1)[:m]
     del_flag = t.del_flag | ((nlive < cfg.half_cap // 2) & (nlive < t.nlive))
 
-    done = del_ok | del_miss | ins_dup | ins_revive | ins_place | ins_grow
+    done = (del_ok | del_miss | ins_dup | ins_bufdup | ins_revive
+            | ins_place | ins_grow)
     ok = del_ok | ins_revive | ins_place | ins_grow
     results = jnp.where(done, ok, results)
     pending = pending & ~done
@@ -834,123 +895,73 @@ def _parallel_fastpath(cfg: TreeConfig, t: DeltaTree, kinds, keys, payloads,
 def update_batch_impl(cfg: TreeConfig, t: DeltaTree, kinds: jax.Array,
                       keys: jax.Array, payloads: jax.Array | None = None):
     """Apply a batch of update ops (insert/delete) in batch order, then run
-    maintenance to fixpoint.  Returns (tree, results[K] bool, rounds).
+    maintenance under ``cfg.maintenance`` (eager: to fixpoint, the paper
+    semantics).  Returns (tree, results[K] bool, MaintenanceStats).
+
+    The round loop lives in ``repro.maintenance.scheduler`` — this is the
+    stable entry point.  The third element used to be a bare round count;
+    ``MaintenanceStats`` still coerces via ``int()`` (DeprecationWarning)
+    for old call sites, but new code should read ``stats.rounds`` etc.
 
     Searches are NOT taken here — use `search_batch` on the snapshot (they
     are wait-free and independent of update ordering within the step).
 
     This is the untraced body; call sites use the jitted/donating
     ``update_batch`` wrapper below, while the forest dispatcher
-    (repro/distributed) vmaps this impl per shard under shard_map.
+    (repro/distributed) lax.maps this impl per shard under shard_map.
     """
-    k = keys.shape[0]
-    if payloads is None:
-        payloads = jnp.zeros((k,), jnp.int32)
-    results = jnp.zeros((k,), jnp.bool_)
-    pending = kinds != OP_SEARCH
+    from repro.maintenance import scheduler as MS  # deferred: imports us
+
+    return MS.run_update(cfg, t, kinds, keys, payloads)
 
 
+def flush_impl(cfg: TreeConfig, t: DeltaTree, budget: int = 64):
+    """Drain all pending maintenance to fixpoint (restores invariant I5
+    after ``deferred``/``budgeted`` update batches).  Returns
+    (tree, MaintenanceStats).  A no-op round count of 0 when nothing is
+    flagged — safe to call under any policy."""
+    from repro.maintenance import scheduler as MS  # deferred: imports us
 
-    def round_cond(s):
-        t, _, pending, rounds = s
-        busy = jnp.any(pending) | jnp.any(t.ins_flag & t.alive) | jnp.any(
-            t.del_flag & t.alive
-        )
-        return busy & (rounds < cfg.max_rounds)
-
-    budget = min(k, 64)  # sequential work per round (leftovers re-round)
-
-    def round_body(s):
-        t, results, pending, rounds = s
-
-        # phase 0: vectorized non-conflicting fast path (re-run each round:
-        # earlier rounds' winners unblock this round's earliest-per-key ops)
-        if cfg.parallel_updates:
-            t, results, pending = jax.lax.cond(
-                jnp.any(pending),
-                lambda a: _parallel_fastpath(cfg, a[0], kinds, keys,
-                                             payloads, a[1], a[2]),
-                lambda a: a,
-                (t, results, pending),
-            )
-
-        # phase 1: budgeted sequential application of the leftovers
-        # (buffer-path inserts, bottom-buffer deletes, conflict losers) —
-        # in batch order, preserving the linearization.
-        def seq_phase(args):
-            t, results, pending = args
-            pend_ids = jnp.nonzero(pending, size=budget, fill_value=-1)[0]
-
-            def op_body(j, s):
-                t, results, pending = s
-                i = pend_ids[j]
-
-                def run(args):
-                    t, results, pending = args
-                    ii = jnp.maximum(i, 0)
-
-                    def ins(t):
-                        return _insert_op(cfg, t, keys[ii], payloads[ii])
-
-                    def dele(t):
-                        return _delete_op(cfg, t, keys[ii])
-
-                    tt, ok, pend = jax.lax.cond(
-                        kinds[ii] == OP_INSERT, ins, dele, t)
-                    return tt, results.at[ii].set(ok), pending.at[ii].set(pend)
-
-                return jax.lax.cond(i >= 0, run, lambda a: a,
-                                    (t, results, pending))
-
-            return jax.lax.fori_loop(0, budget, op_body,
-                                     (t, results, pending))
-
-        t, results, pending = jax.lax.cond(
-            jnp.any(pending), seq_phase, lambda a: a, (t, results, pending))
-
-        # phase 2: insert-side maintenance (Rebalance / Expand)
-        def ins_phase(t):
-            ins_ids = jnp.nonzero(t.ins_flag & t.alive, size=budget,
-                                  fill_value=-1)[0]
-
-            def ins_body(j, t):
-                dn = ins_ids[j]
-                return jax.lax.cond(
-                    dn >= 0, lambda t: _process_ins(cfg, t, dn),
-                    lambda t: t, t)
-
-            return jax.lax.fori_loop(0, budget, ins_body, t)
-
-        t = jax.lax.cond(jnp.any(t.ins_flag & t.alive), ins_phase,
-                         lambda t: t, t)
-
-        # phase 3: delete-side maintenance (Merge)
-        def del_phase(t):
-            del_ids = jnp.nonzero(t.del_flag & t.alive, size=budget,
-                                  fill_value=-1)[0]
-
-            def del_body(j, t):
-                dn = del_ids[j]
-                return jax.lax.cond(
-                    dn >= 0, lambda t: _process_del(cfg, t, dn),
-                    lambda t: t, t)
-
-            return jax.lax.fori_loop(0, budget, del_body, t)
-
-        t = jax.lax.cond(jnp.any(t.del_flag & t.alive), del_phase,
-                         lambda t: t, t)
-        return t, results, pending, rounds + 1
-
-    t, results, pending, rounds = jax.lax.while_loop(
-        round_cond, round_body, (t, results, pending, jnp.int32(0))
-    )
-    return t, results, rounds
+    return MS.flush(cfg, t, budget)
 
 
 # the input tree is DONATED: .at[] updates run in place (callers must
 # rebind `t = update_batch(...)[0]`, as all call sites do)
 update_batch = functools.partial(
     jax.jit, static_argnums=0, donate_argnums=1)(update_batch_impl)
+
+# flush donates too: rebind `t, stats = flush(cfg, t)`
+flush = functools.partial(
+    jax.jit, static_argnums=(0, 2), donate_argnums=1)(flush_impl)
+
+
+def buffered_floor(cfg: TreeConfig, t: DeltaTree, keys: jax.Array):
+    """Smallest *buffered* packed value strictly greater than each key
+    (``cfg.route_left`` when none) — the successor contribution of pending
+    overflow-buffer items under non-eager maintenance (I5' trees).
+
+    One global sort of the buffer arena + a searchsorted per query; the
+    engine dispatch folds this with the tree walk's candidate.  Buffered
+    items are always live, so no tombstone chase is needed on this side.
+    The common drained state (e.g. right after ``flush``) skips the sort
+    entirely.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+
+    def with_items(_):
+        flat = jnp.where(t.buf != EMPTY, t.buf, cfg.route_left).reshape(-1)
+        s = jnp.sort(flat)
+        q = jax.vmap(cfg.qpack)(keys)
+        # qpack packs an all-ones payload, so side="right" lands on the
+        # first entry whose *key* is strictly greater (map and set alike)
+        idx = jnp.searchsorted(s, q, side="right").astype(jnp.int32)
+        safe = jnp.clip(idx, 0, s.shape[0] - 1)
+        return jnp.where(idx < s.shape[0], s[safe], cfg.route_left)
+
+    def drained(_):
+        return jnp.full(keys.shape, cfg.route_left, cfg.vdtype)
+
+    return jax.lax.cond(jnp.any(t.bcount > 0), with_items, drained, None)
 
 
 @functools.partial(jax.jit, static_argnums=0)

@@ -99,8 +99,26 @@ def search(cfg, t, keys: jax.Array):
 
 
 def successor(cfg, t, keys: jax.Array):
-    """Engine-dispatched ordered read: (found[K], succ[K])."""
-    return get_engine(cfg.engine).successor(cfg, t, keys)
+    """Engine-dispatched ordered read: (found[K], succ[K]).
+
+    Under a non-eager maintenance policy the tree may carry pending items
+    in overflow buffers (invariant I5'); those are invisible to the router
+    walk, so the dispatch folds the buffered successor floor
+    (`deltatree.buffered_floor`) with the engine's tree-side result.  The
+    live set is (tree-live ∪ buffered) and the two sides are disjoint, so
+    the min of the two successors is the successor over the union.  Eager
+    trees skip the fold (buffers are empty between steps — I5), keeping
+    the pre-subsystem read bit-identical.
+    """
+    found, succ = get_engine(cfg.engine).successor(cfg, t, keys)
+    policy = getattr(cfg, "maintenance", "eager")
+    if policy == "eager" or not hasattr(cfg, "route_left"):
+        return found, succ
+    bf = DT.buffered_floor(cfg, t, keys)
+    bfound = bf < cfg.route_left
+    bkey = cfg.key_of(bf).astype(succ.dtype)
+    better = bfound & (~found | (bkey < succ))
+    return found | bfound, jnp.where(better, bkey, succ)
 
 
 # --------------------------------------------------------------------------
@@ -132,7 +150,8 @@ def _lockstep_walk(cfg, t, qpacked: jax.Array):
     from repro.kernels import ops as OPS
 
     return OPS.delta_walk(t.value, t.child, t.root, qpacked,
-                          height=cfg.height, max_rounds=cfg.max_rounds)
+                          height=cfg.height, max_rounds=cfg.max_rounds,
+                          q_tile=cfg.q_tile or None)
 
 
 def _lockstep_lookup(cfg, t, keys: jax.Array):

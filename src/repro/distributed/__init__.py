@@ -24,6 +24,7 @@ __all__ = [
     "alloc_failed",
     "bulk_build",
     "empty",
+    "flush",
     "live_items",
     "live_keys",
     "lookup_batch",

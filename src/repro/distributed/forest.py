@@ -43,6 +43,7 @@ from repro.core import (
 from repro.core import deltatree as DT
 from repro.distributed import router as R
 from repro.distributed import splits as SP
+from repro.maintenance import MaintenanceStats
 
 OP_SEARCH, OP_INSERT, OP_DELETE = DT.OP_SEARCH, DT.OP_INSERT, DT.OP_DELETE
 
@@ -207,10 +208,13 @@ def successor_jit(fcfg: ForestConfig, f: Forest, keys: jax.Array):
 @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
 def update_batch(fcfg: ForestConfig, f: Forest, kinds: jax.Array,
                  keys: jax.Array, payloads: jax.Array | None = None):
-    """Routed batch-order updates; per-shard maintenance to fixpoint.
+    """Routed batch-order updates; per-shard maintenance under the tree
+    config's ``maintenance`` policy (shard-local, like all maintenance).
 
-    Returns (forest, results[K] bool, rounds) with ``rounds`` the max over
-    shards — identical contract to ``repro.core.update_batch``."""
+    Returns (forest, results[K] bool, MaintenanceStats) — stats aggregated
+    over shards (``rounds`` = max, the critical path of the concurrent
+    shards; work counters and ``pending`` sum) — identical contract to
+    ``repro.core.update_batch``."""
     keys = keys.astype(jnp.int32)
     k = keys.shape[0]
     if payloads is None:
@@ -226,10 +230,24 @@ def update_batch(fcfg: ForestConfig, f: Forest, kinds: jax.Array,
     def per_shard(t, kn, ks, ps):
         return DT.update_batch_impl(fcfg.tree, t, kn, ks, ps)
 
-    trees, dres, rounds = R.dispatch(s, per_shard, f.trees, dkinds, dkeys,
-                                     dpays, sequential=True)
+    trees, dres, stats = R.dispatch(s, per_shard, f.trees, dkinds, dkeys,
+                                    dpays, sequential=True)
     return (Forest(trees=trees, splits=f.splits),
-            R.gather_batch(r, dres), jnp.max(rounds))
+            R.gather_batch(r, dres), MaintenanceStats.reduce(stats))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2), donate_argnums=1)
+def flush(fcfg: ForestConfig, f: Forest, budget: int = 64):
+    """Drain pending maintenance on every shard (restores I5 forest-wide
+    after ``deferred``/``budgeted`` batches).  Returns (forest, stats)."""
+
+    def per_shard(t):
+        return DT.flush_impl(fcfg.tree, t, budget)
+
+    trees, stats = R.dispatch(fcfg.num_shards, per_shard, f.trees,
+                              sequential=True)
+    return (Forest(trees=trees, splits=f.splits),
+            MaintenanceStats.reduce(stats))
 
 
 # --------------------------------------------------------------------------

@@ -48,6 +48,42 @@ def _resolve_interpret(interpret: bool | None) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
+def _check_q_tile(tile: int, origin: str, lane_aligned: bool) -> int:
+    """Shared q_tile validation: positive everywhere; the process-wide
+    production knob (``REPRO_PALLAS_QTILE``) additionally requires a
+    multiple of 128 so the compiled Pallas block shape stays lane-aligned.
+    Explicit per-call tiles stay lenient — tests and interpret-mode runs
+    legitimately use small tiles (16/64)."""
+    tile = int(tile)
+    bad = tile <= 0 or (lane_aligned and tile % 128)
+    if bad:
+        want = "positive multiple of 128" if lane_aligned else "positive"
+        raise ValueError(f"q_tile must be {want}, got {tile} ({origin})")
+    return tile
+
+
+def default_q_tile() -> int:
+    """Lockstep kernel query tile: ``REPRO_PALLAS_QTILE`` env override,
+    else 256 (two VREG lanes' worth; the ROADMAP autotuning item sweeps
+    this once TPU timings exist)."""
+    env = os.environ.get("REPRO_PALLAS_QTILE", "").strip()
+    if not env:
+        return 256
+    try:
+        tile = int(env)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_PALLAS_QTILE must be an integer, got {env!r}") from None
+    return _check_q_tile(tile, f"REPRO_PALLAS_QTILE={env!r}",
+                         lane_aligned=True)
+
+
+def _resolve_q_tile(q_tile: int | None) -> int:
+    if q_tile is None:
+        return default_q_tile()
+    return _check_q_tile(q_tile, "explicit q_tile", lane_aligned=False)
+
+
 def _row_walk(rows, childrows, queries, *, height, q_tile, interpret):
     """One lockstep round: the Pallas kernel, or its compiled jnp mirror
     when the kernel cannot lower (int64 packed rows outside interpret)."""
@@ -60,7 +96,7 @@ def _row_walk(rows, childrows, queries, *, height, q_tile, interpret):
 
 
 def delta_walk(value: jax.Array, child: jax.Array, root: jax.Array,
-               queries: jax.Array, *, height: int, q_tile: int = 256,
+               queries: jax.Array, *, height: int, q_tile: int | None = None,
                max_rounds: int = 64, interpret: bool | None = None):
     """Multi-hop ΔTree walk in lockstep rounds over the query frontier.
 
@@ -74,6 +110,8 @@ def delta_walk(value: jax.Array, child: jax.Array, root: jax.Array,
     ``interpret=None`` resolves via `default_interpret` *at call time*
     (env/backend changes are honored between calls); callers that trace
     this under an outer jit bake the mode at their own trace time.
+    ``q_tile=None`` resolves via `default_q_tile` the same way
+    (``REPRO_PALLAS_QTILE`` env override, else 256).
 
     Returns per query (batch-padding sliced off):
       leaf_val: packed value at the final position (EMPTY on miss)
@@ -86,7 +124,8 @@ def delta_walk(value: jax.Array, child: jax.Array, root: jax.Array,
                 left turn happened)
     """
     return _delta_walk(value, child, root, queries, height=height,
-                       q_tile=q_tile, max_rounds=max_rounds,
+                       q_tile=_resolve_q_tile(q_tile),
+                       max_rounds=max_rounds,
                        interpret=_resolve_interpret(interpret))
 
 
@@ -144,11 +183,11 @@ def _delta_walk(value, child, root, queries, *, height, q_tile, max_rounds,
 
 
 def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
-                 queries: jax.Array, *, height: int, q_tile: int = 256,
+                 queries: jax.Array, *, height: int, q_tile: int | None = None,
                  max_rounds: int = 64, interpret: bool | None = None):
     """Legacy 3-tuple walk: (leaf_val, leaf_b, final_dn) per query (same
-    contract as `kernels.ref.ref_delta_search`); ``interpret=None`` =
-    auto-resolved at call time like `delta_walk`."""
+    contract as `kernels.ref.ref_delta_search`); ``interpret=None`` /
+    ``q_tile=None`` = auto-resolved at call time like `delta_walk`."""
     lv, lb, dn, _, _ = delta_walk(
         value, child, root, queries,
         height=height, q_tile=q_tile, max_rounds=max_rounds,
@@ -159,12 +198,12 @@ def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
 
 def delta_contains(value: jax.Array, mark: jax.Array, child: jax.Array,
                    buf: jax.Array, root: jax.Array, queries: jax.Array, *,
-                   height: int, q_tile: int = 256, max_rounds: int = 64,
-                   interpret: bool | None = None):
+                   height: int, q_tile: int | None = None,
+                   max_rounds: int = 64, interpret: bool | None = None):
     """Paper SEARCHNODE on top of the kernel walk: leaf match & ~mark, else
     the ΔNode's overflow buffer (paper Fig. 8 lines 9..17)."""
     return _delta_contains(value, mark, child, buf, root, queries,
-                           height=height, q_tile=q_tile,
+                           height=height, q_tile=_resolve_q_tile(q_tile),
                            max_rounds=max_rounds,
                            interpret=_resolve_interpret(interpret))
 

@@ -1,0 +1,43 @@
+"""repro.maintenance — policy-driven maintenance scheduler (DESIGN.md §7).
+
+The paper's concurrency claim is that Insert/Delete are non-blocking and
+only *occasionally* blocked by structural maintenance (Rebalance / Expand /
+Merge).  This subsystem makes that schedulable: ``update_batch`` applies
+ops and then hands the flagged ΔNodes to the scheduler, whose policy
+decides how much structural work runs *now* versus being carried forward:
+
+- ``eager``       — drain every flagged ΔNode to fixpoint inside the update
+                    step (the pre-subsystem semantics; bit-identical).
+- ``deferred``    — updates only append/mark; maintenance runs on an
+                    explicit ``flush(tree)`` (or when a full buffer blocks
+                    an op — correctness always wins over deferral).
+- ``budgeted:k``  — at most ``k`` ΔNode repairs per update batch,
+                    prioritized by buffer occupancy; residual
+                    ``ins_flag``/``del_flag`` work carries forward.
+
+Every update returns a ``MaintenanceStats`` telemetry pytree (rounds,
+rebuilds, expands, merges, buffered-pending count) alongside the per-op
+results.  Under non-eager policies invariant I5 ("every buffer empty after
+``update_batch``") is relaxed to I5': every buffered value's root descent
+lands in the ΔNode holding it, which is exactly what keeps wait-free
+searches (and, with the buffered-floor fold in ``repro.core.engine``,
+successor queries) correct over pending items.
+"""
+
+from repro.maintenance.policy import (
+    KINDS,
+    MaintenancePolicy,
+    parse_policy,
+)
+from repro.maintenance.stats import MaintenanceStats
+from repro.maintenance.scheduler import flush, pending_count, run_update
+
+__all__ = [
+    "KINDS",
+    "MaintenancePolicy",
+    "MaintenanceStats",
+    "parse_policy",
+    "flush",
+    "pending_count",
+    "run_update",
+]

@@ -67,6 +67,7 @@ class ServeEngine:
         self.active: dict[int, Request] = {}
         self.lengths: dict[int, int] = {}
         self._next_id = 0
+        self._steps = 0   # decode steps taken (drives the background flush)
 
     # ------------------------------------------------------------- submit ---
 
@@ -143,6 +144,13 @@ class ServeEngine:
         )
         for sid in sids:
             self.lengths[sid] += 1
+        self._steps += 1
+        # background maintenance: with a non-eager pager policy, updates
+        # (allocate/free) only append/mark and the structural work drains
+        # here, amortized across decode steps instead of blocking a batch
+        fe = getattr(self.pager.cfg, "flush_every", 0)
+        if fe and self._steps % fe == 0:
+            self.pager.flush()
         out = {}
         for bi, sid in enumerate(sids):
             tok = int(jnp.argmax(logits[bi, 0]))

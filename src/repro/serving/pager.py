@@ -14,8 +14,10 @@ the key encoding.  Any handle with ``Capability.map_mode`` can be injected
 via the ``index=`` argument — the pager protocol never touches backend
 internals.  ``PagerConfig.engine`` picks the SearchEngine the block-table
 lookups run under (``"lockstep"`` = the Pallas vEB walk on the decode hot
-path); it threads through ``tree_config`` / ``forest_config`` into the
-default index.
+path); ``PagerConfig.maintenance`` the index maintenance policy (with
+``"deferred"`` + ``flush_every=N`` the ServeEngine drains structural
+maintenance every N decode steps — the background-flush hook); both
+thread through ``tree_config`` / ``forest_config`` into the default index.
 
 Requires 64-bit mode (packed int64 values): callers must run with
 JAX_ENABLE_X64=1 or `jax.config.update("jax_enable_x64", True)`.
@@ -41,6 +43,12 @@ class PagerConfig:
     max_blocks: int = 1024        # logical blocks per sequence
     tree_height: int = 7          # UB=127 ΔNodes (paper's best)
     engine: str = "scalar"        # SearchEngine for block-table lookups
+    maintenance: str = "eager"    # index maintenance policy (repro.maintenance)
+    flush_every: int = 0          # ServeEngine: flush() every N decode steps
+    #                               (0 = never; only useful with a non-eager
+    #                               policy — amortizes Rebalance/Expand/Merge
+    #                               across serving steps instead of paying
+    #                               them inside allocate/free batches)
 
     @property
     def payload_bits(self) -> int:
@@ -56,6 +64,7 @@ class PagerConfig:
             buf_cap=64,
             payload_bits=self.payload_bits,
             engine=self.engine,
+            maintenance=self.maintenance,
         )
 
     def make_index(self) -> Index:
@@ -80,7 +89,9 @@ class DeltaPager:
             f"{self.index.capability}")
         self.free_pages = list(range(cfg.num_pages - 1, -1, -1))
         self.seq_blocks: dict[int, int] = {}   # seq -> allocated blocks
-        self.stats = {"searches": 0, "inserts": 0, "deletes": 0, "hops": 0}
+        self.stats = {"searches": 0, "inserts": 0, "deletes": 0, "hops": 0,
+                      "flushes": 0, "maint_rebuilds": 0, "maint_expands": 0,
+                      "maint_merges": 0}
 
     # ---- key encoding (overridden by ShardedDeltaPager) ----
     def _key(self, seq_id, block) -> np.ndarray:
@@ -126,6 +137,21 @@ class DeltaPager:
         assert bool(np.asarray(res).all())
         self.free_pages.extend(int(p) for p in np.asarray(pages))
         self.stats["deletes"] += n
+
+    def flush(self):
+        """Drain the index's pending maintenance (no-op under "eager").
+
+        The ServeEngine calls this every ``cfg.flush_every`` decode steps —
+        the background-flush hook that amortizes structural maintenance
+        across serving steps instead of paying it inside allocate/free.
+        Returns the MaintenanceStats (or None)."""
+        self.index, mstats = self.index.flush()
+        if mstats is not None:
+            self.stats["flushes"] += 1
+            self.stats["maint_rebuilds"] += int(mstats.rebuilds)
+            self.stats["maint_expands"] += int(mstats.expands)
+            self.stats["maint_merges"] += int(mstats.merges)
+        return mstats
 
     # ---- the decode-step hot path ----
     def block_tables(self, seq_ids, max_blocks: int) -> np.ndarray:

@@ -11,8 +11,14 @@ from repro.core import layout
 from repro.core.oracle import SetOracle, OP_INSERT, OP_DELETE
 
 
-def check_invariants(cfg: TreeConfig, t) -> None:
-    """Structural invariants I1-I5 from the module docstring."""
+def check_invariants(cfg: TreeConfig, t, require_empty_buffers=True) -> None:
+    """Structural invariants I1-I5 from the module docstring.
+
+    ``require_empty_buffers=False`` checks the policy-conditional variant:
+    non-eager maintenance policies relax I5 to I5' (buffered values' root
+    descents land in their holding ΔNode — asserted by the maintenance
+    suite via searches), so only I1-I4 plus buffer bookkeeping hold here.
+    """
     pos = np.asarray(layout.veb_pos_table(cfg.height))
     value = np.asarray(t.value)
     child = np.asarray(t.child)
@@ -25,8 +31,12 @@ def check_invariants(cfg: TreeConfig, t) -> None:
     bottom0 = cfg.bottom0
     rl = int(np.asarray(cfg.route_left))
 
-    assert int(np.asarray(t.bcount).sum()) == 0, "I5: buffers drained"
-    assert (buf == layout.EMPTY).all(), "I5"
+    if require_empty_buffers:
+        assert int(np.asarray(t.bcount).sum()) == 0, "I5: buffers drained"
+        assert (buf == layout.EMPTY).all(), "I5"
+    else:  # bcount bookkeeping still exact per ΔNode
+        assert (np.asarray(t.bcount)
+                == (buf != layout.EMPTY).sum(axis=1)).all(), "bcount"
 
     for dn in range(cfg.max_dnodes):
         if not alive[dn]:
@@ -64,12 +74,13 @@ def test_random_ops_vs_oracle(height, nsteps):
         keys = rng.integers(1, 150, size=K).astype(np.int32)
         found, _ = search_jit(cfg, t, jnp.asarray(keys))
         assert (np.asarray(found) == oracle.snapshot_search(keys)).all()
-        t, res, rounds = update_batch(cfg, t, jnp.asarray(kinds),
-                                      jnp.asarray(keys))
+        t, res, stats = update_batch(cfg, t, jnp.asarray(kinds),
+                                     jnp.asarray(keys))
         exp = oracle.apply_updates(kinds, keys)
         assert (np.asarray(res) == exp).all(), step
         assert not bool(t.alloc_fail)
-        assert int(rounds) < cfg.max_rounds
+        assert int(stats.rounds) < cfg.max_rounds
+        assert int(stats.pending) == 0  # I5 under the eager default
         assert (live_keys(cfg, t) == oracle.keys()).all()
     check_invariants(cfg, t)
 

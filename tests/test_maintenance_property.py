@@ -1,0 +1,60 @@
+"""Hypothesis property tests for the maintenance scheduler: arbitrary op
+sequences under every policy × engine == oracle (interleaved searches and
+successors stay correct over keys pending in overflow buffers), and flush
+restores invariant I5."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import deltatree as DT
+from repro.core.oracle import SetOracle
+from tests.test_deltatree import check_invariants
+from tests.test_maintenance import POLICIES
+
+op_batches = st.lists(
+    st.lists(
+        st.tuples(st.integers(1, 2), st.integers(1, 40)),
+        min_size=1, max_size=12,
+    ),
+    min_size=1, max_size=5,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(batches=op_batches,
+       policy=st.sampled_from(POLICIES),
+       engine=st.sampled_from(["scalar", "lockstep"]))
+def test_property_policies_match_oracle(batches, policy, engine):
+    """For every policy × engine, interleaved update + search + successor
+    agree with the oracle (searches include keys pending in buffers under
+    deferred/budgeted), and flush restores I5."""
+    cfg = DT.TreeConfig(height=3, max_dnodes=256, buf_cap=4,
+                        maintenance=policy, engine=engine)
+    t = DT.empty(cfg)
+    oracle = SetOracle()
+    for batch in batches:
+        kinds = np.asarray([k for k, _ in batch], np.int32)
+        keys = np.asarray([v for _, v in batch], np.int32)
+        found, _ = DT.search_jit(cfg, t, jnp.asarray(keys))
+        assert (np.asarray(found) == oracle.snapshot_search(keys)).all()
+        fs, sc = DT.successor_jit(cfg, t, jnp.asarray(keys))
+        live = oracle.keys()
+        idx = np.searchsorted(live, keys, side="right")
+        ef = idx < live.size
+        assert (np.asarray(fs) == ef).all()
+        if live.size:
+            assert (np.asarray(sc)[ef] == live[idx[ef]]).all()
+        t, res, stats = DT.update_batch(cfg, t, jnp.asarray(kinds),
+                                        jnp.asarray(keys))
+        assert (np.asarray(res) == oracle.apply_updates(kinds, keys)).all()
+        assert not bool(t.alloc_fail)
+        assert (DT.live_keys(cfg, t) == oracle.keys()).all()
+    check_invariants(cfg, t, require_empty_buffers=(policy == "eager"))
+    t, fstats = DT.flush(cfg, t)
+    assert int(fstats.pending) == 0
+    assert (DT.live_keys(cfg, t) == oracle.keys()).all()
+    check_invariants(cfg, t)

@@ -69,6 +69,15 @@ def engine_supported(backend: str, engine: str | None) -> bool:
     return engine is None or engine in supported_engines(backend)
 
 
+def dispatch_of(ix) -> str | None:
+    """How this Index's sharded reads dispatch: "fused" (one cross-shard
+    frontier per device), "vmap" (dense per-shard lanes), or None for
+    single-arena backends — recorded in benchmark JSON rows."""
+    if not ix.capability.sharded:
+        return None
+    return "fused" if ix.capability.fused_forest else "vmap"
+
+
 def emit(row: dict) -> dict:
     """One machine-parsable JSON row per result line."""
     print(json.dumps(row), flush=True)
@@ -182,6 +191,7 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
     found.block_until_ready()
     dt = time.perf_counter() - t0
     return {"backend": backend, "engine": ix.engine,
+            "dispatch": dispatch_of(ix),
             "maintenance": ix.maintenance, "q_tile": resolved_q_tile(ix),
             "flush_every": flush_every,
             "seed": seed, "update_pct": update_pct, "batch": batch,

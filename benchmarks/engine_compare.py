@@ -5,11 +5,14 @@ engine so the perf trajectory of the lockstep path is visible run over run.
 
 For every engine-capable backend (``deltatree``, ``forest``) and batch
 width, the identical seeded workload runs through ``run_index`` once per
-engine; each per-engine JSON row records ``engine``, and the lockstep row
-additionally records ``speedup_vs_scalar``.  On CPU the lockstep engine
-pays the Pallas interpreter tax — the row pair still pins down result
-parity cost; on TPU (compiled kernel, one contiguous row DMA per query per
-round) the same rows measure the paper's locality claim.
+engine; each per-engine JSON row records ``engine`` (and ``dispatch``),
+and the lockstep rows additionally record ``speedup_vs_scalar``.  The
+forest backend gets a third leg: lockstep under the dense per-shard vmap
+dispatch (``fused=False``), so the default fused row also records
+``speedup_vs_vmap`` — the cross-shard frontier's own win.  On CPU the
+lockstep engine pays the Pallas interpreter tax — the rows still pin down
+result parity cost; on TPU (compiled kernel, one contiguous row DMA per
+query per round) the same rows measure the paper's locality claim.
 """
 
 from __future__ import annotations
@@ -24,7 +27,6 @@ from benchmarks.common import (
 )
 
 KEY_MAX = 2_000_000
-ENGINES = ("scalar", "lockstep")
 DEFAULT_BACKENDS = ("deltatree", "forest")
 
 
@@ -43,16 +45,30 @@ def run(initial_size: int, total_ops: int, batches, update_pct: float,
         kw = backend_kwargs(name, vals.size, key_max=KEY_MAX,
                             total_ops=total_ops)
         for batch in batches:
-            per_engine = {}
-            for eng in ENGINES:
-                r = run_index(name, vals, KEY_MAX, update_pct, batch,
-                              total_ops, seed=seed, engine=eng, **kw)
-                per_engine[eng] = r
-                row = {"bench": "engine_compare", **r}
-                if eng == "lockstep":
-                    row["speedup_vs_scalar"] = round(
-                        r["ops_per_s"] / per_engine["scalar"]["ops_per_s"], 3)
-                rows.append(emit(row))
+            scalar_r = run_index(name, vals, KEY_MAX, update_pct, batch,
+                                 total_ops, seed=seed, engine="scalar", **kw)
+            rows.append(emit({"bench": "engine_compare", **scalar_r}))
+            vmap_r = None
+            if name == "forest":
+                # pin the dense vmap dispatch alongside the (default,
+                # fused) lockstep forest row, so the dispatch-level win
+                # is tracked next to the engine-level one
+                vmap_r = run_index(name, vals, KEY_MAX, update_pct, batch,
+                                   total_ops, seed=seed, engine="lockstep",
+                                   fused=False, **kw)
+                rows.append(emit({
+                    "bench": "engine_compare", **vmap_r,
+                    "speedup_vs_scalar": round(
+                        vmap_r["ops_per_s"] / scalar_r["ops_per_s"], 3)}))
+            lock_r = run_index(name, vals, KEY_MAX, update_pct, batch,
+                               total_ops, seed=seed, engine="lockstep", **kw)
+            row = {"bench": "engine_compare", **lock_r,
+                   "speedup_vs_scalar": round(
+                       lock_r["ops_per_s"] / scalar_r["ops_per_s"], 3)}
+            if vmap_r is not None:
+                row["speedup_vs_vmap"] = round(
+                    lock_r["ops_per_s"] / vmap_r["ops_per_s"], 3)
+            rows.append(emit(row))
     return rows
 
 

@@ -3,11 +3,17 @@
 For each (shards, batch) point the same randomized mixed workload (search +
 insert/delete at ``update_pct``) runs against the ``forest`` backend and
 against the ``deltatree`` baseline built from the same initial key set —
-both through ``make_index`` — with the jit warm.  Emits one JSON row per
-point on stdout (machine-parsable, one line each), e.g.::
+both through ``make_index`` — with the jit warm.  Every point additionally
+runs the lockstep engine through both forest dispatches — the dense
+per-shard vmap reference (``fused=False``) and the fused cross-shard
+frontier — so each sweep point records a ``"dispatch": "fused"`` row with
+``speedup_vs_vmap``.  Emits one JSON row per run on stdout
+(machine-parsable, one line each), e.g.::
 
-    {"bench": "forest_scale", "shards": 4, "batch": 1024, "seed": 0, ...
-     "ops_per_s": ..., "baseline_ops_per_s": ..., "speedup": ...}
+    {"bench": "forest_scale", "shards": 4, "batch": 1024, "seed": 0,
+     "engine": "lockstep", "dispatch": "fused", ...
+     "ops_per_s": ..., "baseline_ops_per_s": ..., "speedup": ...,
+     "speedup_vs_vmap": ...}
 
 On a single CPU device the forest's "shards" mesh degenerates to vmap, so
 speedups here measure routing overhead + smaller-tree effects; run with
@@ -44,24 +50,55 @@ def run(shard_counts, batches, initial_size: int, total_ops: int,
                                           key_max=KEY_MAX, height=height,
                                           total_ops=total_ops))
         for shards in shard_counts:
-            perf = run_index("forest", vals, KEY_MAX, update_pct, batch,
-                             total_ops, seed=seed, engine=engine,
-                             **backend_kwargs("forest", vals.size,
-                                              key_max=KEY_MAX, height=height,
-                                              num_shards=shards,
-                                              total_ops=total_ops))
-            rows.append(emit({
+            kw = backend_kwargs("forest", vals.size, key_max=KEY_MAX,
+                                height=height, num_shards=shards,
+                                total_ops=total_ops)
+            point = {
                 "bench": "forest_scale",
                 "shards": shards,
                 "batch": batch,
                 "seed": seed,
-                "engine": perf["engine"],
                 "devices": jax.device_count(),
                 "update_pct": update_pct,
                 "initial_keys": int(vals.size),
-                "ops_per_s": perf["ops_per_s"],
                 "baseline_ops_per_s": base["ops_per_s"],
-                "speedup": round(perf["ops_per_s"] / base["ops_per_s"], 3),
+            }
+            if engine != "lockstep":
+                # --engine lockstep would duplicate the explicit fused
+                # leg below (same config, same seed) — skip the extra
+                # timed run and the ambiguous second "fused" row
+                perf = run_index("forest", vals, KEY_MAX, update_pct, batch,
+                                 total_ops, seed=seed, engine=engine, **kw)
+                rows.append(emit({
+                    **point,
+                    "engine": perf["engine"],
+                    "dispatch": perf["dispatch"],
+                    "ops_per_s": perf["ops_per_s"],
+                    "speedup": round(perf["ops_per_s"] / base["ops_per_s"],
+                                     3),
+                }))
+            # fused-vs-vmap pair: the same lockstep workload through the
+            # dense per-shard dispatch and the fused cross-shard frontier
+            # (TreeConfig.engine selects fused by default; fused=False
+            # pins the reference) — the dispatch-level speedup is the
+            # tentpole's own perf row
+            vmap_r = run_index("forest", vals, KEY_MAX, update_pct, batch,
+                               total_ops, seed=seed, engine="lockstep",
+                               fused=False, **kw)
+            rows.append(emit({
+                **point, "engine": "lockstep", "dispatch": "vmap",
+                "ops_per_s": vmap_r["ops_per_s"],
+                "speedup": round(vmap_r["ops_per_s"] / base["ops_per_s"], 3),
+            }))
+            fused_r = run_index("forest", vals, KEY_MAX, update_pct, batch,
+                                total_ops, seed=seed, engine="lockstep",
+                                fused=True, **kw)
+            rows.append(emit({
+                **point, "engine": "lockstep", "dispatch": "fused",
+                "ops_per_s": fused_r["ops_per_s"],
+                "speedup": round(fused_r["ops_per_s"] / base["ops_per_s"], 3),
+                "speedup_vs_vmap": round(
+                    fused_r["ops_per_s"] / vmap_r["ops_per_s"], 3),
             }))
     return rows
 

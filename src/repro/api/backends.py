@@ -106,6 +106,19 @@ def _forest_make(initial, payloads, cfg=None, splits=None, **kw):
     return cfg, F.bulk_build(cfg, np.asarray(initial), payloads, splits)
 
 
+def _forest_fused(cfg: ForestConfig) -> bool:
+    """True when this config's forest reads run the fused cross-shard
+    frontier (``cfg.fused`` enabled AND the selected engine provides a
+    ``forest_batch`` entry point — see ``repro.core.engine``)."""
+    from repro.core import engine as E
+
+    try:
+        eng = E.get_engine(cfg.tree.engine)
+    except KeyError:
+        return False   # bad engine names fail later in make_index
+    return bool(cfg.fused) and eng.forest_batch is not None
+
+
 def _forest_update(cfg, f, batch: OpBatch):
     return F.update_batch(cfg, f, batch.kinds, batch.keys, batch.payloads)
 
@@ -120,7 +133,7 @@ register_backend(BackendSpec(
     make=_forest_make,
     capability=lambda cfg: Capability(
         map_mode=cfg.tree.payload_bits > 0, successor=True, sharded=True,
-        deferred_maintenance=True),
+        deferred_maintenance=True, fused_forest=_forest_fused(cfg)),
     search=F.search_batch,
     lookup=F.lookup_batch,
     update=_forest_update,

@@ -35,6 +35,8 @@ class Capability:
     sharded: bool = False     # state fans out over a device mesh
     updates: bool = True      # insert_delete supported at all
     deferred_maintenance: bool = False  # non-eager policies + flush()
+    fused_forest: bool = False  # sharded reads share one fused frontier
+    #                             (engine provides forest_batch + enabled)
 
 
 class CapabilityError(NotImplementedError):

@@ -26,6 +26,7 @@ from repro.core.deltatree import (
 )
 from repro.core import engine
 from repro.core.engine import (
+    ForestBatch,
     SearchEngine,
     available_engines,
     get_engine,
@@ -35,6 +36,7 @@ from repro.core.engine import (
 __all__ = [
     "layout",
     "engine",
+    "ForestBatch",
     "SearchEngine",
     "available_engines",
     "get_engine",

@@ -27,6 +27,14 @@ stayed active).  The conformance suite asserts bit-for-bit equality.
 An engine is a table of pure functions over ``(cfg, tree, keys)``; new
 read paths (e.g. a fused update-aware walk) register with
 ``register_engine`` and become selectable everywhere by name.
+
+An engine may additionally declare a ``forest_batch`` entry point
+(``ForestBatch``): fused cross-shard reads over a base-offset view of
+co-resident shard arenas — one multi-root ``delta_walk`` frontier for
+the whole routed batch instead of a vmap over (S, K) dense lanes.  The
+forest dispatch (`repro.distributed.forest`) selects it automatically
+via ``TreeConfig.engine`` (DESIGN.md §8); the scalar engine declares
+none and keeps the dense vmap dispatch as the reference.
 """
 
 from __future__ import annotations
@@ -43,6 +51,34 @@ from repro.core.layout import EMPTY
 
 
 @dataclasses.dataclass(frozen=True)
+class ForestBatch:
+    """An engine's fused cross-shard forest entry point (DESIGN.md §8).
+
+    Both hooks run over the *device-local* stacked arena pytree ``trees``
+    (leading (S_loc,) axis — the shards co-resident on one device) fused
+    into a single base-offset arena view, with every query seeded at its
+    owner shard's root (``lid`` = per-query local shard index).  One
+    kernel launch per frontier round serves all co-resident shards — no
+    dense (S, K) scatter, no vmap over shards.
+
+    lookup:    (cfg, trees, lid[K], keys[K]) -> (found, payload, hops)
+    successor: (cfg, trees, lid[K], keys[K])
+               -> (found[K], succ[K], has_min[S_loc], mins[S_loc])
+               — the per-shard minimum probes (successor of KEY_MIN-1,
+               one per local shard) ride the same chase as S_loc extra
+               lanes; the forest's cross-shard suffix-min combine
+               consumes them.
+
+    Results must be bit-identical to the dense per-shard vmap dispatch
+    (found/payload/succ and per-query hops) — the fused-conformance suite
+    asserts it.
+    """
+
+    lookup: Callable[..., Any]
+    successor: Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
 class SearchEngine:
     """One registered read path: pure functions over (cfg, tree, keys).
 
@@ -50,11 +86,15 @@ class SearchEngine:
                — map-mode read; set mode returns payload 0/-1.  ``search``
                and ``contains`` are this minus the payload column.
     successor: (cfg, t, keys[K]) -> (found[K], succ[K])
+    forest_batch: optional fused cross-shard read entry point
+               (``ForestBatch``); None means the forest falls back to the
+               dense per-shard vmap dispatch for this engine.
     """
 
     name: str
     lookup: Callable[..., Any]
     successor: Callable[..., Any]
+    forest_batch: ForestBatch | None = None
 
 
 _ENGINES: dict[str, SearchEngine] = {}
@@ -114,11 +154,22 @@ def successor(cfg, t, keys: jax.Array):
     policy = getattr(cfg, "maintenance", "eager")
     if policy == "eager" or not hasattr(cfg, "route_left"):
         return found, succ
-    bf = DT.buffered_floor(cfg, t, keys)
+    return _fold_floor(cfg, DT.buffered_floor(cfg, t, keys), found, succ)
+
+
+def _fold_floor(cfg, bf, found, succ):
+    """Fold a buffered-floor column into a tree-side successor result:
+    the live set is (tree-live ∪ buffered) and the sides are disjoint, so
+    the min of the two successors is the successor over the union."""
     bfound = bf < cfg.route_left
     bkey = cfg.key_of(bf).astype(succ.dtype)
     better = bfound & (~found | (bkey < succ))
     return found | bfound, jnp.where(better, bkey, succ)
+
+
+def forest_batch(cfg) -> ForestBatch | None:
+    """``cfg.engine``'s fused forest entry point (None = vmap dispatch)."""
+    return get_engine(cfg.engine).forest_batch
 
 
 # --------------------------------------------------------------------------
@@ -127,7 +178,15 @@ def successor(cfg, t, keys: jax.Array):
 
 
 def _scalar_lookup(cfg, t, keys: jax.Array):
-    return jax.vmap(lambda k: DT.search_one(cfg, t, k))(keys)
+    found, payload, hops = jax.vmap(lambda k: DT.search_one(cfg, t, k))(keys)
+    # the reserved ROUTE_LEFT key (router pad lanes, clamped above-domain
+    # probes) is born resolved under the lockstep walk sentinel contract:
+    # mirror it here — deterministic miss, payload -1, hops 0 — so the
+    # engines' bit-identical per-query hops contract holds for every
+    # representable query, reserved keys included
+    pad = jnp.asarray(keys, jnp.int32) == layout.ROUTE_LEFT
+    return (found & ~pad, jnp.where(pad, -1, payload),
+            jnp.where(pad, 0, hops))
 
 
 def _scalar_successor(cfg, t, keys: jax.Array):
@@ -146,36 +205,65 @@ register_engine(SearchEngine(
 # --------------------------------------------------------------------------
 
 
-def _lockstep_walk(cfg, t, qpacked: jax.Array):
+def _walk_queries(cfg, keys: jax.Array) -> jax.Array:
+    """``cfg.qpack`` for the walk kernel, with the reserved ROUTE_LEFT
+    key mapped to the packed walk sentinel (``walk_big``) so router pad
+    lanes are born resolved — terminate in round 0, miss, no successor
+    candidate — in map mode too (in set mode ``qpack(ROUTE_LEFT)`` *is*
+    the sentinel already).  ROUTE_LEFT is outside the key domain
+    (``layout.KEY_MAX`` < INT32_MAX), so no legitimate query is affected.
+    """
+    from repro.kernels.veb_search import walk_big
+
+    big = jnp.asarray(walk_big(cfg.vdtype), cfg.vdtype)
+    return jnp.where(jnp.asarray(keys, jnp.int32) == layout.ROUTE_LEFT,
+                     big, cfg.qpack(keys))
+
+
+def _lockstep_walk(cfg, t, qpacked: jax.Array, root=None):
+    """The kernel driver: ``root`` defaults to the tree's root; a (K,)
+    array seeds each query at its own root (fused multi-shard view)."""
     from repro.kernels import ops as OPS
 
-    return OPS.delta_walk(t.value, t.child, t.root, qpacked,
+    return OPS.delta_walk(t.value, t.child,
+                          t.root if root is None else root, qpacked,
                           height=cfg.height, max_rounds=cfg.max_rounds,
                           q_tile=cfg.q_tile or None)
 
 
 def _lockstep_lookup(cfg, t, keys: jax.Array):
     keys = jnp.asarray(keys, jnp.int32)
-    lv, lb, dn, hops, _ = _lockstep_walk(cfg, t, cfg.qpack(keys))
+    lv, lb, dn, hops, _ = _lockstep_walk(cfg, t, _walk_queries(cfg, keys))
     # SEARCHNODE resolution shared verbatim with the scalar engine
     found, payload = DT.searchnode(cfg, t, keys, lv, lb, dn)
     return found, payload, hops
 
 
-def _lockstep_successor(cfg, t, keys: jax.Array, max_chase: int = 8):
-    """Lockstep successor: the walk kernel folds the min left-turn router
-    per round (router = min of its right subtree); a final leaf check and a
-    bounded liveness chase mirror `DT.successor_one` lane for lane."""
+def _successor_chase(cfg, t, keys: jax.Array, root=None, max_chase: int = 8):
+    """Lockstep successor core: the walk kernel folds the min left-turn
+    router per round (router = min of its right subtree); a final leaf
+    check and a bounded liveness chase mirror `DT.successor_one` lane for
+    lane.  ``root`` as in `_lockstep_walk` — per-lane seeds let the same
+    chase serve the fused multi-shard view (each lane chases entirely
+    within its own shard: candidates are routers/leaves of the seed
+    arena, and the liveness re-walk starts from the same seed)."""
     keys = jnp.asarray(keys, jnp.int32)
     k = keys.shape[0]
     pos = jnp.asarray(layout.veb_pos_table(cfg.height))
     big = cfg.route_left
 
     def one_pass(qk):
-        lv, lb, dn, _, cand = _lockstep_walk(cfg, t, cfg.qpack(qk))
+        lv, lb, dn, _, cand = _lockstep_walk(cfg, t, _walk_queries(cfg, qk),
+                                             root)
         leaf_live = (lv != EMPTY) & ~t.mark[dn, pos[lb]]
         leaf_gt = leaf_live & (cfg.key_of(lv) > qk)
         return jnp.where(leaf_gt & (lv < cand), lv, cand)
+
+    def live_of(qk):
+        lv, lb, dn, _, _ = _lockstep_walk(cfg, t, _walk_queries(cfg, qk),
+                                          root)
+        found, _ = DT.searchnode(cfg, t, qk, lv, lb, dn)
+        return found
 
     def chase(s):
         qk, ck, found, active, it = s
@@ -183,7 +271,7 @@ def _lockstep_successor(cfg, t, keys: jax.Array, max_chase: int = 8):
         cknew = cfg.key_of(cand)
         exists = cand < big
         # candidate routers may be tombstones: verify liveness in lockstep
-        live, _, _ = _lockstep_lookup(cfg, t, cknew)
+        live = live_of(cknew)
         done_now = ~exists | live
         return (
             jnp.where(active & ~done_now, cknew, qk),
@@ -202,8 +290,112 @@ def _lockstep_successor(cfg, t, keys: jax.Array, max_chase: int = 8):
     return found, jnp.where(found, ck, 0)
 
 
+def _lockstep_successor(cfg, t, keys: jax.Array, max_chase: int = 8):
+    return _successor_chase(cfg, t, keys, max_chase=max_chase)
+
+
+# ---- fused cross-shard frontier (the forest_batch entry point) ----
+
+
+def _fused_trees_view(cfg, trees):
+    """Stacked (S, M, ...) shard arenas -> one base-offset arena view.
+
+    value/child/root fuse through `kernels.veb_search.fuse_arenas` (the
+    shard base is applied to child links once here, never per round); the
+    SEARCHNODE/floor-side arrays (mark, buf, per-ΔNode stats) flatten
+    alongside so `DT.searchnode` indexes fused ΔNode ids directly.
+    Shard-scoped fields (root, freelist, alloc_fail) keep shard 0's value
+    and must not be read through the view — walks always pass explicit
+    per-query roots.  Returns (view, fused_roots (S,))."""
+    from repro.kernels.veb_search import fuse_arenas
+
+    # loud trace-time guard: a future per-ΔNode field kept at its stacked
+    # (S, M, ...) shape would be gather-clamped silently by fused ids —
+    # new fields must be taught to this view explicitly
+    assert set(DT.DeltaTree._fields) == {
+        "value", "mark", "child", "buf", "nlive", "bcount", "nchild",
+        "parent", "pslot", "alive", "free_stack", "free_top", "root",
+        "ins_flag", "del_flag", "alloc_fail",
+    }, "new DeltaTree field: teach _fused_trees_view how it fuses"
+    s, m = trees.value.shape[0], trees.value.shape[1]
+    value, child, roots = fuse_arenas(trees.value, trees.child, trees.root)
+    base = jnp.arange(s, dtype=jnp.int32) * jnp.int32(m)
+
+    def flat(x):
+        return x.reshape((s * m,) + x.shape[2:])
+
+    view = trees._replace(
+        value=value, child=child,
+        mark=flat(trees.mark), buf=flat(trees.buf),
+        nlive=flat(trees.nlive), bcount=flat(trees.bcount),
+        nchild=flat(trees.nchild),
+        parent=flat(jnp.where(trees.parent >= 0,
+                              trees.parent + base[:, None], trees.parent)),
+        pslot=flat(trees.pslot), alive=flat(trees.alive),
+        ins_flag=flat(trees.ins_flag), del_flag=flat(trees.del_flag),
+        free_stack=flat(trees.free_stack), free_top=trees.free_top[0],
+        root=trees.root[0], alloc_fail=trees.alloc_fail[0],
+    )
+    return view, roots
+
+
+def _fused_lockstep_lookup(cfg, trees, lid, keys: jax.Array):
+    keys = jnp.asarray(keys, jnp.int32)
+    view, roots = _fused_trees_view(cfg, trees)
+    lv, lb, dn, hops, _ = _lockstep_walk(cfg, view, _walk_queries(cfg, keys),
+                                         roots[lid])
+    found, payload = DT.searchnode(cfg, view, keys, lv, lb, dn)
+    return found, payload, hops
+
+
+def _fused_fold_buffered(cfg, trees, lid, keys, found, succ):
+    """The I5' buffered-floor fold of `successor`, restricted per lane to
+    its owner shard: a later shard's pending item must reach a query
+    through the cross-shard fallback (shard-min probes), exactly as on
+    the vmap dispatch, or the suffix-min combine would double-count it.
+
+    The per-shard vmap + lid pick computes an (S_loc, K) floor matrix and
+    keeps one entry per lane — deliberately the *same* per-shard
+    `buffered_floor` calls as the vmap dispatch, so the fold stays
+    bit-identical by construction.  It only runs under non-eager
+    maintenance, and a searchsorted matrix is cheap next to the S× walk
+    work the fused frontier removes; a shard-keyed single-sort variant is
+    a possible future win (needs a (shard, packed) composite key, which
+    set mode can't widen without x64)."""
+    policy = getattr(cfg, "maintenance", "eager")
+    if policy == "eager":
+        return found, succ
+    floors = jax.vmap(lambda t: DT.buffered_floor(cfg, t, keys))(trees)
+    bf = floors[lid, jnp.arange(keys.shape[0])]
+    return _fold_floor(cfg, bf, found, succ)
+
+
+def _fused_lockstep_successor(cfg, trees, lid, keys: jax.Array,
+                              max_chase: int = 8):
+    """Fused successor: K query lanes plus one shard-minimum probe lane
+    per co-resident shard (successor of KEY_MIN-1 seeded at that shard's
+    root — replacing the vmap path's per-shard appended lane) share one
+    chase.  Returns (found[K], succ[K], has_min[S_loc], mins[S_loc])."""
+    keys = jnp.asarray(keys, jnp.int32)
+    k = keys.shape[0]
+    s_loc = trees.value.shape[0]
+    view, roots = _fused_trees_view(cfg, trees)
+    qk = jnp.concatenate(
+        [keys, jnp.full((s_loc,), layout.KEY_MIN - 1, jnp.int32)])
+    lid_all = jnp.concatenate(
+        [jnp.asarray(lid, jnp.int32), jnp.arange(s_loc, dtype=jnp.int32)])
+    found, succ = _successor_chase(cfg, view, qk, roots[lid_all],
+                                   max_chase=max_chase)
+    found, succ = _fused_fold_buffered(cfg, trees, lid_all, qk, found, succ)
+    return found[:k], succ[:k], found[k:], succ[k:]
+
+
 register_engine(SearchEngine(
     name="lockstep",
     lookup=_lockstep_lookup,
     successor=_lockstep_successor,
+    forest_batch=ForestBatch(
+        lookup=_fused_lockstep_lookup,
+        successor=_fused_lockstep_successor,
+    ),
 ))

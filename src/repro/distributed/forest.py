@@ -18,6 +18,15 @@ snapshot per shard).  Maintenance (Rebalance / Expand / Merge) runs
 entirely shard-local — the paper's locality argument is what makes the
 partition free of cross-shard traffic outside the router's permutation.
 
+Reads take one of two dispatches (DESIGN.md §8): the dense per-shard
+vmap (always for updates; for reads when the engine has no fused entry
+point or ``ForestConfig.fused`` is off) or the *fused* cross-shard
+frontier — co-resident shard arenas concatenated into one base-offset
+view, every query seeded at its owner shard's root, one ``delta_walk``
+kernel launch per frontier round for the whole routed batch.  Both are
+bit-identical (found/payload/succ and per-query hops); the fused path is
+what makes ``engine="lockstep"`` pay one frontier instead of S.
+
 Cross-shard coordination exists in exactly one read-only place: a
 successor query whose owner shard has no key above it falls through to the
 first later non-empty shard's minimum.  The per-shard minima are computed
@@ -41,6 +50,7 @@ from repro.core import (
     layout,
 )
 from repro.core import deltatree as DT
+from repro.core import engine as E
 from repro.distributed import router as R
 from repro.distributed import splits as SP
 from repro.maintenance import MaintenanceStats
@@ -65,6 +75,11 @@ class ForestConfig:
     tree: TreeConfig = TreeConfig()
     key_min: int = layout.KEY_MIN
     key_max: int = layout.KEY_MAX
+    fused: bool = True      # use the engine's fused cross-shard frontier
+    #                         (when it provides one); False pins reads to
+    #                         the dense per-shard vmap dispatch — the
+    #                         reference path the fused-conformance suite
+    #                         and benchmarks compare against
 
 
 class Forest(NamedTuple):
@@ -133,27 +148,60 @@ def bulk_build(fcfg: ForestConfig, values: np.ndarray,
 # wait-free reads
 # --------------------------------------------------------------------------
 
+# dense pad-lane key: the reserved ROUTE_LEFT sentinel — provably matches
+# no stored key, makes lockstep pad lanes born-resolved (round 0, no
+# successor chase), and can never alias a real query the way the old
+# ``fill=0`` did (0 is EMPTY-adjacent but a *legal* key's neighborhood;
+# ROUTE_LEFT is outside the key domain entirely)
+_PAD_KEY = jnp.int32(layout.ROUTE_LEFT)
+
+
+def _route_keys(keys: jax.Array) -> jax.Array:
+    """Clamp query keys to the int32 key domain *in the caller's dtype*,
+    then cast: under x64 an int64 probe beyond the int32 range would
+    otherwise wrap before ``searchsorted`` and route to (and walk in) the
+    wrong shard.  Below-domain probes clamp to KEY_MIN-1 = 0 (never
+    stored; successor = global minimum), above-domain probes to the
+    reserved ROUTE_LEFT sentinel (never stored; no successor) — both
+    exactly the semantics of the original out-of-range key."""
+    keys = jnp.asarray(keys)
+    return jnp.clip(keys, 0, layout.ROUTE_LEFT).astype(jnp.int32)
+
+
+def _fused(fcfg: ForestConfig):
+    """The engine's fused forest entry point when enabled, else None."""
+    return E.forest_batch(fcfg.tree) if fcfg.fused else None
+
 
 @functools.partial(jax.jit, static_argnums=0)
 def search_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
     """Routed wait-free search. Returns (found[K], hops[K])."""
-    keys = keys.astype(jnp.int32)
-    r = R.route(f.splits, keys)
-    dkeys = R.scatter_dense(r, fcfg.num_shards, keys, jnp.int32(0))
-
-    def per_shard(t, ks):
-        return DT.search_batch(fcfg.tree, t, ks)
-
-    found, hops = R.dispatch(fcfg.num_shards, per_shard, f.trees, dkeys)
-    return R.gather_batch(r, found), R.gather_batch(r, hops)
+    found, _, hops = _lookup(fcfg, f, keys)
+    return found, hops
 
 
 @functools.partial(jax.jit, static_argnums=0)
 def lookup_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
     """Routed map-mode lookup. Returns (found[K], payload[K], hops[K])."""
-    keys = keys.astype(jnp.int32)
+    return _lookup(fcfg, f, keys)
+
+
+def _lookup(fcfg: ForestConfig, f: Forest, keys: jax.Array):
+    keys = _route_keys(keys)
+    fb = _fused(fcfg)
+    if fb is not None:
+        # fused frontier: batch order end to end, one kernel launch per
+        # round across all co-resident shards (no (S, K) dense scatter)
+        sid = R.shard_ids(f.splits, keys)
+
+        def per_device(trees_loc, lid, ks):
+            return fb.lookup(fcfg.tree, trees_loc, lid, ks), None
+
+        r, lane, _ = R.fused_dispatch(fcfg.num_shards, per_device,
+                                      f.trees, sid, keys)
+        return R.gather_fused(r, lane)
     r = R.route(f.splits, keys)
-    dkeys = R.scatter_dense(r, fcfg.num_shards, keys, jnp.int32(0))
+    dkeys = R.scatter_dense(r, fcfg.num_shards, keys, _PAD_KEY)
 
     def per_shard(t, ks):
         return DT.lookup_batch(fcfg.tree, t, ks)
@@ -163,15 +211,43 @@ def lookup_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
             R.gather_batch(r, hops))
 
 
+def _succ_combine(sid, f_owner, s_owner, has_min, mins):
+    """Cross-shard successor combine: first non-empty shard strictly
+    after each owner shard (suffix min over shard minima works because
+    shards are key-ordered) — shared by both dispatch paths so the fused
+    frontier cannot drift from the vmap reference."""
+    masked = jnp.where(has_min, mins, _NO_SUCC)
+    suffix = jax.lax.associative_scan(jnp.minimum, masked, reverse=True)
+    after = jnp.concatenate([suffix[1:], jnp.full((1,), _NO_SUCC)])
+    fallback = after[sid]
+    out_found = f_owner | (fallback < _NO_SUCC)
+    out_succ = jnp.where(f_owner, s_owner,
+                         jnp.where(fallback < _NO_SUCC, fallback, 0))
+    return out_found, out_succ
+
+
 @functools.partial(jax.jit, static_argnums=0)
 def successor_jit(fcfg: ForestConfig, f: Forest, keys: jax.Array):
     """Routed wait-free successor. Returns (found[K], succ[K]).
 
     Owner-shard miss falls through to the first later non-empty shard's
     minimum (computed in the same dispatch; combined with a suffix-min)."""
-    keys = keys.astype(jnp.int32)
+    keys = _route_keys(keys)
+    fb = _fused(fcfg)
+    if fb is not None:
+        sid = R.shard_ids(f.splits, keys)
+
+        def per_device(trees_loc, lid, ks):
+            found, succ, has_min, mins = fb.successor(
+                fcfg.tree, trees_loc, lid, ks)
+            return (found, succ), (has_min, mins)
+
+        r, (found, succ), (has_min, mins) = R.fused_dispatch(
+            fcfg.num_shards, per_device, f.trees, sid, keys)
+        f_owner, s_owner = R.gather_fused(r, (found, succ))
+        return _succ_combine(sid, f_owner, s_owner, has_min, mins)
     r = R.route(f.splits, keys)
-    dkeys = R.scatter_dense(r, fcfg.num_shards, keys, jnp.int32(0))
+    dkeys = R.scatter_dense(r, fcfg.num_shards, keys, _PAD_KEY)
 
     def per_shard(t, ks):
         # shard minimum = successor of (KEY_MIN - 1), riding the same
@@ -185,19 +261,9 @@ def successor_jit(fcfg: ForestConfig, f: Forest, keys: jax.Array):
 
     found, succ, has_min, mins = R.dispatch(
         fcfg.num_shards, per_shard, f.trees, dkeys)
-    # first non-empty shard strictly after each owner shard (suffix min over
-    # shard minima works because shards are key-ordered)
-    masked = jnp.where(has_min, mins, _NO_SUCC)
-    suffix = jax.lax.associative_scan(jnp.minimum, masked, reverse=True)
-    after = jnp.concatenate([suffix[1:], jnp.full((1,), _NO_SUCC)])
     f_owner = R.gather_batch(r, found)
     s_owner = R.gather_batch(r, succ)
-    sid = r.sid
-    fallback = after[sid]
-    out_found = f_owner | (fallback < _NO_SUCC)
-    out_succ = jnp.where(f_owner, s_owner,
-                         jnp.where(fallback < _NO_SUCC, fallback, 0))
-    return out_found, out_succ
+    return _succ_combine(r.sid, f_owner, s_owner, has_min, mins)
 
 
 # --------------------------------------------------------------------------
@@ -214,8 +280,17 @@ def update_batch(fcfg: ForestConfig, f: Forest, kinds: jax.Array,
     Returns (forest, results[K] bool, MaintenanceStats) — stats aggregated
     over shards (``rounds`` = max, the critical path of the concurrent
     shards; work counters and ``pending`` sum) — identical contract to
-    ``repro.core.update_batch``."""
-    keys = keys.astype(jnp.int32)
+    ``repro.core.update_batch``.
+
+    Updates share the reads' key-domain boundary (`_route_keys`): an
+    out-of-int32-domain key (x64 caller) is a no-op row with result
+    False — it can never be stored, and silently wrapping it would
+    insert a bogus key that the clamped reads could then never see."""
+    kq = jnp.asarray(keys)
+    in_domain = (kq >= layout.KEY_MIN) & (kq <= layout.KEY_MAX)
+    kinds = jnp.where(in_domain, kinds.astype(jnp.int32),
+                      jnp.int32(OP_SEARCH))
+    keys = _route_keys(kq)
     k = keys.shape[0]
     if payloads is None:
         payloads = jnp.zeros((k,), jnp.int32)

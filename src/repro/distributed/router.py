@@ -1,6 +1,7 @@
-"""Batched cross-shard routing for the DeltaForest (DESIGN.md §4).
+"""Batched cross-shard routing for the DeltaForest (DESIGN.md §4, §8).
 
-A mixed query/update batch arrives in *linearization order*.  The router
+A mixed query/update batch arrives in *linearization order*.  The dense
+dispatch (updates; reads under engines without a fused entry point)
 
   1. assigns every op its owner shard with one ``searchsorted`` against the
      (S-1,) boundary array,
@@ -10,10 +11,17 @@ A mixed query/update batch arrives in *linearization order*.  The router
      same shard, so batch-order semantics are preserved end to end),
   3. computes segment offsets of the sorted shard ids (a second
      searchsorted) and scatters each op into a dense (S, K) per-shard lane,
-     padded with no-op rows (OP_SEARCH / key 0),
+     padded with no-op rows (OP_SEARCH / the born-resolved ROUTE_LEFT
+     sentinel key),
   4. dispatches the per-shard kernels under ``shard_map`` over the
      "shards" mesh (leftover shards-per-device vmapped inside the body),
   5. inverse-permutes the (S, K) per-shard results back to batch order.
+
+``fused_dispatch`` (DESIGN.md §8) is the read path's alternative when the
+engine provides a fused cross-shard frontier: no per-*shard* lanes at all
+— on one device the batch passes through in batch order; on D devices it
+bucket-sorts by owner device ((D, K) lanes) and each device fuses its
+co-resident shards into one base-offset arena walk.
 
 Everything on the hot path is shape-static and jittable: no Python loop
 touches an op, and the only per-shard state a device reads is its own arena
@@ -30,33 +38,50 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core import layout
 from repro.parallel import make_forest_mesh
 
 
 class Routing(NamedTuple):
     """Static-shape routing plan for one batch (all (K,) int32)."""
 
-    sid: jax.Array         # owner shard per op, batch order
-    order: jax.Array       # stable permutation sorting ops by shard
+    sid: jax.Array         # owner bucket per op, batch order
+    order: jax.Array       # stable permutation sorting ops by bucket
     sid_sorted: jax.Array  # sid[order]
-    local: jax.Array       # lane within the owner shard's dense row
+    local: jax.Array       # lane within the owner bucket's dense row
+
+
+def shard_ids(splits: jax.Array, keys: jax.Array) -> jax.Array:
+    """Owner shard per key: one searchsorted against the boundaries.
+
+    The *boundaries* widen to the key dtype, never the reverse — an int64
+    probe beyond the int32 range (x64 callers) must not wrap before it is
+    routed, or it lands on a bogus shard.  Splits always fit int32, so
+    widening them is lossless."""
+    return jnp.searchsorted(
+        splits.astype(keys.dtype), keys, side="right"
+    ).astype(jnp.int32)
 
 
 def route(splits: jax.Array, keys: jax.Array) -> Routing:
     """Build the bucket-sort plan: searchsorted + segment offsets."""
-    k = keys.shape[0]
-    num_shards = splits.shape[0] + 1
-    sid = jnp.searchsorted(
-        splits, keys.astype(splits.dtype), side="right"
-    ).astype(jnp.int32)
-    order = jnp.argsort(sid, stable=True)
-    sid_sorted = sid[order]
-    # offsets[s] = first sorted index owned by shard s (segment offsets)
+    return route_by(shard_ids(splits, keys), splits.shape[0] + 1)
+
+
+def route_by(ids: jax.Array, num_buckets: int) -> Routing:
+    """Bucket-sort plan over precomputed bucket ids (stable argsort ⇒
+    batch order is preserved *within* each bucket — the per-bucket
+    linearization).  ``route`` is this over owner shards; the fused
+    dispatch uses it over owner *devices*."""
+    k = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    ids_sorted = ids[order]
+    # offsets[s] = first sorted index owned by bucket s (segment offsets)
     offsets = jnp.searchsorted(
-        sid_sorted, jnp.arange(num_shards, dtype=jnp.int32), side="left"
+        ids_sorted, jnp.arange(num_buckets, dtype=jnp.int32), side="left"
     ).astype(jnp.int32)
-    local = jnp.arange(k, dtype=jnp.int32) - offsets[sid_sorted]
-    return Routing(sid, order, sid_sorted, local)
+    local = jnp.arange(k, dtype=jnp.int32) - offsets[ids_sorted]
+    return Routing(ids, order, ids_sorted, local)
 
 
 def scatter_dense(r: Routing, num_shards: int, x: jax.Array, fill) -> jax.Array:
@@ -75,8 +100,17 @@ def gather_batch(r: Routing, dense: jax.Array) -> jax.Array:
 
 
 @functools.lru_cache(maxsize=None)
-def forest_mesh(num_shards: int):
+def _forest_mesh_cached(num_shards: int, ndev: int):
+    del ndev  # cache key only — make_forest_mesh reads the live device set
     return make_forest_mesh(num_shards)
+
+
+def forest_mesh(num_shards: int):
+    """The "shards" mesh for ``num_shards``, cached per (num_shards,
+    device_count) — a change in visible devices within one process
+    (fake-device tests, late backend selection) gets a fresh mesh instead
+    of a stale cached one."""
+    return _forest_mesh_cached(num_shards, jax.device_count())
 
 
 def dispatch(num_shards: int, fn, trees, *dense_args, sequential=False):
@@ -106,3 +140,60 @@ def dispatch(num_shards: int, fn, trees, *dense_args, sequential=False):
         out_specs=P("shards"),
         check_rep=False,
     )(trees, *dense_args)
+
+
+def fused_dispatch(num_shards: int, fn, trees, sid, keys):
+    """Fused-frontier dispatch: one ``fn`` call per *device*, each over
+    the base-offset fusion of its co-resident shards (DESIGN.md §8).
+
+    ``fn(trees_loc, lid[K'], keys[K'])`` sees the device-local stacked
+    (S_loc, ...) arenas, the per-lane local shard index, and its lanes'
+    keys, and returns ``(lane_outs, shard_outs)`` — pytrees whose leaves
+    carry a leading lane axis (K',) resp. per-local-shard axis (S_loc,);
+    ``shard_outs`` may be None.
+
+    On a 1-device mesh the whole batch passes through in batch order —
+    no permutation, no dense scatter (the fused path's claim that routing
+    needs only ``sid``).  On D devices the batch bucket-sorts by owner
+    *device* (stable, so per-device batch order is preserved) into (D, K)
+    dense lanes — D×K lanes instead of the vmap dispatch's S×K — padded
+    with the born-resolved ROUTE_LEFT sentinel key (pad lanes terminate
+    in round 0 and are never gathered).
+
+    Returns (routing | None, lane_outs, shard_outs): lane outputs stay in
+    the device-dense layout — map them through ``gather_fused`` with the
+    returned routing; shard outputs concatenate to a leading (S,) axis in
+    shard order.
+    """
+    mesh = forest_mesh(num_shards)
+    d = mesh.devices.size
+    if d == 1:
+        lane, per_shard = fn(trees, sid, keys)
+        return None, lane, per_shard
+    sloc = num_shards // d
+    r = route_by(sid // jnp.int32(sloc), d)
+    dlid = scatter_dense(r, d, sid % jnp.int32(sloc), jnp.int32(0))
+    dkeys = scatter_dense(r, d, keys, jnp.int32(layout.ROUTE_LEFT))
+
+    def body(trees_loc, lid_loc, keys_loc):
+        lane, per_shard = fn(trees_loc, lid_loc[0], keys_loc[0])
+        # lane leaves regain a leading device axis so shard_map stacks
+        # them to (D, K); per-shard leaves concatenate to (S,) directly
+        return jax.tree.map(lambda x: x[None], lane), per_shard
+
+    lane, per_shard = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("shards"),) * 3,
+        out_specs=P("shards"),
+        check_rep=False,
+    )(trees, dlid, dkeys)
+    return r, lane, per_shard
+
+
+def gather_fused(r: Routing | None, lane_outs):
+    """Batch-order view of ``fused_dispatch`` lane outputs: the identity
+    when no permutation happened (1-device mesh), else the device-dense
+    inverse permutation."""
+    if r is None:
+        return lane_outs
+    return jax.tree.map(lambda x: gather_batch(r, x), lane_outs)

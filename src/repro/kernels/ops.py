@@ -5,8 +5,10 @@
   the paper's "memory transfer"), run the level kernel (one full in-ΔNode
   descent), hop to the child ΔNode, repeat until every query lands on its
   leaf.  Reports per-query hop counts (= rounds active = ΔNodes visited)
-  and the folded successor candidate.  This is the engine room of the
-  ``"lockstep"`` SearchEngine (repro.core.engine).
+  and the folded successor candidate.  ``root`` may be per-query (multi-
+  root seeding over a `veb_search.fuse_arenas` view — the fused forest
+  frontier, DESIGN.md §8).  This is the engine room of the ``"lockstep"``
+  SearchEngine (repro.core.engine).
 - `delta_search`       — legacy 3-tuple contract on top of `delta_walk`.
 - `delta_contains`     — paper SEARCHNODE set semantics on top (mark bit +
   overflow buffer check).
@@ -102,10 +104,18 @@ def delta_walk(value: jax.Array, child: jax.Array, root: jax.Array,
 
     value/child are unpadded arena arrays (value int32, or int64 packed map
     mode); ``queries`` are *packed* values in the same dtype (`cfg.qpack`).
+    ``root`` is either a scalar (single-arena walk) or a per-query (K,)
+    int32 array of frontier seeds — the multi-root form drives one fused
+    frontier across several concatenated arenas (`veb_search.fuse_arenas`
+    base-offset view, each query seeded at its owner shard's root).
     Rows are 128-padded here; the query batch is padded to a ``q_tile``
     multiple with a ROUTE_LEFT sentinel that provably matches no stored
     leaf, and padded lanes start *resolved* so they never contribute a
-    round to the termination test.
+    round to the termination test.  The same sentinel contract extends to
+    *real* lanes: a query equal to ``walk_big(dtype)`` (the reserved
+    ROUTE_LEFT key, packed) is born resolved — hops 0, miss leaf, no
+    successor candidate — which is what lets the forest router pad its
+    dense per-shard lanes without buying them a full walk.
 
     ``interpret=None`` resolves via `default_interpret` *at call time*
     (env/backend changes are honored between calls); callers that trace
@@ -140,14 +150,19 @@ def _delta_walk(value, child, root, queries, *, height, q_tile, max_rounds,
     kp = (k + q_tile - 1) // q_tile * q_tile
     big = jnp.asarray(walk_big(value.dtype), value.dtype)
     qpad = jnp.pad(queries, (0, kp - k), constant_values=walk_big(value.dtype))
+    # scalar root broadcasts (single arena); a (K,) array seeds each query
+    # at its own root (fused multi-arena frontier)
+    dn0 = jnp.pad(jnp.broadcast_to(jnp.asarray(root, jnp.int32), (k,)),
+                  (0, kp - k))
 
     state = dict(
-        dn=jnp.full((kp,), root, jnp.int32),
-        # padding lanes are born resolved: they never gate termination
-        resolved=jnp.arange(kp) >= k,
+        dn=dn0,
+        # padding lanes AND sentinel-keyed real lanes (router pads) are
+        # born resolved: they never gate termination nor count a hop
+        resolved=(jnp.arange(kp) >= k) | (qpad == big),
         leaf_val=jnp.zeros((kp,), value.dtype),
         leaf_b=jnp.ones((kp,), jnp.int32),
-        final_dn=jnp.full((kp,), root, jnp.int32),
+        final_dn=dn0,
         hops=jnp.zeros((kp,), jnp.int32),
         cand=jnp.full((kp,), big, value.dtype),
         rounds=jnp.int32(0),

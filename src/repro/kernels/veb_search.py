@@ -145,3 +145,27 @@ def pad_arena(value: jax.Array, child: jax.Array):
     child_p = jnp.pad(child, ((0, 0), (0, cp - child.shape[1])),
                       constant_values=-1)
     return value_p, child_p
+
+
+def fuse_arenas(value: jax.Array, child: jax.Array, root: jax.Array):
+    """Concatenate stacked shard arenas into one base-offset arena view.
+
+    value (S, M, UB) / child (S, M, CP) / root (S,) are S independent
+    arenas whose ΔNode ids are arena-local.  The fused view is a single
+    (S*M, ...) arena in which shard ``s``'s ids shift by ``s*M`` — the
+    base offset is applied to child links and roots ONCE, here, never per
+    walk round — so a multi-root `ops.delta_walk` (per-query ``root``
+    seeds) can drive one shared frontier across every shard.  Child links
+    of ``-1`` (none) are preserved; walks seeded at shard ``s``'s fused
+    root can only ever reach shard ``s``'s rows (child links never cross
+    arenas), so per-query results are bit-identical to S separate walks.
+
+    Returns (fused_value (S*M, UB), fused_child (S*M, CP),
+    fused_roots (S,) int32).
+    """
+    s, m = value.shape[0], value.shape[1]
+    base = jnp.arange(s, dtype=jnp.int32) * jnp.int32(m)
+    child = jnp.where(child >= 0, child + base[:, None, None], child)
+    return (value.reshape((s * m,) + value.shape[2:]),
+            child.reshape((s * m,) + child.shape[2:]),
+            root.astype(jnp.int32) + base)

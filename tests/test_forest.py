@@ -5,6 +5,8 @@ degenerates to vmap); subprocess tests exercise real shard_map over 8 fake
 host devices and the x64 map-mode / sharded-pager paths.
 """
 
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -46,6 +48,193 @@ def test_router_roundtrip():
     for s in range(4):
         row = dense_np[s][dense_np[s] != 0]
         assert (SP.shard_of_np(np.asarray(splits), row) == s).all()
+
+
+def test_read_pads_born_resolved():
+    """Dense read dispatch pads with the reserved ROUTE_LEFT sentinel (not
+    the legal key 0): pad lanes terminate in round 0 under the lockstep
+    walk (zero hops, no successor candidate) and pad-lane results are
+    never gathered back into the batch."""
+    from repro.core import layout
+    from repro.core import deltatree as DT
+    from repro.distributed import router as R
+    from repro.kernels.ops import delta_walk
+    from repro.kernels.veb_search import walk_big
+
+    rng = np.random.default_rng(8)
+    tcfg = TreeConfig(height=4, max_dnodes=256, buf_cap=8)
+    vals = np.unique(rng.integers(1, 400, 150).astype(np.int32))
+    t = DT.bulk_build(tcfg, vals)
+    # sentinel lanes: born resolved — 0 hops, miss, no candidate — while
+    # real lanes in the same batch walk normally
+    q = np.concatenate([vals[:8], [layout.ROUTE_LEFT] * 5]).astype(np.int32)
+    lv, _, _, hops, cand = delta_walk(t.value, t.child, t.root,
+                                      jnp.asarray(q), height=4, q_tile=16)
+    assert (np.asarray(hops)[-5:] == 0).all()
+    assert (np.asarray(hops)[:8] > 0).all()
+    assert (np.asarray(lv)[-5:] == 0).all()          # EMPTY: a miss
+    assert (np.asarray(cand)[-5:] == walk_big(jnp.int32)).all()
+    # router level: every dense pad lane carries the sentinel, and the
+    # inverse permutation never reads one (poison check)
+    splits = jnp.asarray([100, 200, 300], jnp.int32)
+    keys = jnp.asarray(rng.integers(1, 120, size=32), jnp.int32)  # skewed
+    r = R.route(splits, keys)
+    dense = R.scatter_dense(r, 4, keys, jnp.int32(layout.ROUTE_LEFT))
+    dense_np = np.asarray(dense)
+    assert (dense_np == layout.ROUTE_LEFT).sum() == 4 * 32 - 32
+    poison = jnp.where(dense == layout.ROUTE_LEFT, jnp.int32(-12345), dense)
+    back = np.asarray(R.gather_batch(r, poison))
+    assert (back != -12345).all()
+    np.testing.assert_array_equal(back, np.asarray(keys))
+    # forest level: lockstep per-shard hops through the padded dense rows
+    # equal the single-tree hops (pads contribute no rounds, and results
+    # are identical to the scalar reference)
+    lcfg = TreeConfig(height=4, max_dnodes=256, buf_cap=8, engine="lockstep")
+    fcfg_l = D.ForestConfig(num_shards=4, tree=lcfg, key_max=400, fused=False)
+    fcfg_s = D.ForestConfig(num_shards=4, tree=tcfg, key_max=400, fused=False)
+    f = D.bulk_build(fcfg_s, vals)
+    q2 = jnp.asarray(rng.integers(0, 420, 64), jnp.int32)
+    fl, hl = D.search_batch(fcfg_l, f, q2)
+    fs, hs = D.search_batch(fcfg_s, f, q2)
+    np.testing.assert_array_equal(np.asarray(fl), np.asarray(fs))
+    np.testing.assert_array_equal(np.asarray(hl), np.asarray(hs))
+
+
+def test_delta_walk_multi_root_seeding():
+    """A (K,) root array seeds each query at its own arena root: walking
+    a `fuse_arenas` view of two stacked arenas is bit-identical to two
+    separate single-root walks."""
+    from repro.core import deltatree as DT
+    from repro.kernels.ops import delta_walk
+    from repro.kernels.veb_search import fuse_arenas
+
+    rng = np.random.default_rng(9)
+    tcfg = TreeConfig(height=4, max_dnodes=128, buf_cap=8)
+    vals_a = np.unique(rng.integers(1, 500, 120).astype(np.int32))
+    vals_b = np.unique(rng.integers(500, 999, 120).astype(np.int32))
+    ta, tb = DT.bulk_build(tcfg, vals_a), DT.bulk_build(tcfg, vals_b)
+    qa = rng.integers(1, 500, 40).astype(np.int32)
+    qb = rng.integers(500, 999, 40).astype(np.int32)
+    value = jnp.stack([ta.value, tb.value])
+    child = jnp.stack([ta.child, tb.child])
+    root = jnp.stack([ta.root, tb.root])
+    fv, fc, froots = fuse_arenas(value, child, root)
+    lid = jnp.asarray([0] * 40 + [1] * 40, jnp.int32)
+    q = jnp.asarray(np.concatenate([qa, qb]))
+    fused = delta_walk(fv, fc, froots[lid], q, height=4, q_tile=16)
+    ra = delta_walk(ta.value, ta.child, ta.root, jnp.asarray(qa),
+                    height=4, q_tile=16)
+    rb = delta_walk(tb.value, tb.child, tb.root, jnp.asarray(qb),
+                    height=4, q_tile=16)
+    m = int(ta.value.shape[0])
+    for i, (a, b) in enumerate(zip(ra, rb)):
+        one = np.concatenate([np.asarray(a), np.asarray(b)])
+        got = np.asarray(fused[i])
+        if i == 2:  # final_dn: arena-local ids shift by the shard base
+            one = np.concatenate([np.asarray(a), np.asarray(b) + m])
+        np.testing.assert_array_equal(got, one)
+
+
+def test_forest_routes_int32_boundary_keys():
+    """An out-of-int32-range probe (x64 caller) must clamp — not wrap —
+    before routing: above-domain keys route right and report
+    not-found/no-successor, below-domain keys report successor = global
+    minimum (subprocess leg: int64 keys need JAX_ENABLE_X64)."""
+    out = run_py("""
+import numpy as np, jax.numpy as jnp
+from repro.core import TreeConfig
+import repro.distributed as D
+from repro.distributed import router as R
+
+vals = np.asarray([10, 150, 250, 380], np.int32)
+hops_by_engine = {}
+for engine, fused in (("scalar", False), ("lockstep", True)):
+    fcfg = D.ForestConfig(
+        num_shards=4, key_max=400, fused=fused,
+        tree=TreeConfig(height=4, max_dnodes=64, buf_cap=8, engine=engine))
+    f = D.bulk_build(fcfg, vals, splits=np.asarray([100, 200, 300]))
+    q = jnp.asarray(np.array([2**31, 2**31 + 100, -5, 0, 2**31 - 2,
+                              2**40, 150], np.int64))
+    # routing happens on the pre-cast dtype: no wrap to shard 0
+    sid = np.asarray(R.shard_ids(f.splits, q))
+    assert (sid[[0, 1, 5]] == 3).all(), sid
+    assert (sid[[2, 3]] == 0).all(), sid
+    found, hops = D.search_batch(fcfg, f, q)
+    hops_by_engine[engine] = np.asarray(hops)
+    np.testing.assert_array_equal(
+        np.asarray(found), [False, False, False, False, False, False, True])
+    sf, sv = D.successor_jit(fcfg, f, q)
+    np.testing.assert_array_equal(
+        np.asarray(sf), [False, False, True, True, False, False, True])
+    assert int(np.asarray(sv)[2]) == 10 and int(np.asarray(sv)[3]) == 10
+    assert int(np.asarray(sv)[6]) == 250
+    # updates share the boundary: out-of-domain keys are no-ops (False),
+    # never wrapped inserts the clamped reads could not see
+    uk = jnp.asarray(np.array([2**31 + 7, -3, 2**40, 30], np.int64))
+    f, res, _ = D.update_batch(fcfg, f, jnp.full(4, 1, jnp.int32), uk)
+    np.testing.assert_array_equal(np.asarray(res),
+                                  [False, False, False, True])
+    assert D.live_keys(fcfg, f).tolist() == [10, 30, 150, 250, 380]
+# the engines' bit-identical hops contract holds for clamped sentinel
+# probes too (both born resolved: 0 hops)
+np.testing.assert_array_equal(hops_by_engine["scalar"],
+                              hops_by_engine["lockstep"])
+assert (hops_by_engine["scalar"][[0, 1, 5]] == 0).all()
+print("BOUNDARY KEYS OK")
+""", x64=True)
+    assert "BOUNDARY KEYS OK" in out
+
+
+def test_forest_mesh_tracks_device_count():
+    """`router.forest_mesh` must not serve a stale cached mesh after the
+    visible device count changes within the process (subprocess leg:
+    needs a multi-device start state to observe shrinkage)."""
+    out = run_py("""
+import jax
+from unittest import mock
+from repro.distributed import router as R
+
+assert jax.device_count() == 8
+m8 = R.forest_mesh(4)
+assert m8.devices.size == 4
+assert R.forest_mesh(4) is m8           # same visibility: cached
+with mock.patch.object(jax, "device_count", return_value=1):
+    m1 = R.forest_mesh(4)
+    assert m1.devices.size == 1, m1     # fresh mesh, not the stale one
+assert R.forest_mesh(4) is m8           # original visibility: original mesh
+print("MESH CACHE OK")
+""", devices=8)
+    assert "MESH CACHE OK" in out
+
+
+def test_successor_cross_shard_fallback_corners():
+    """Cross-shard successor corners vs the single-tree oracle, through
+    every dispatch: owner shard empty, key greater than every live key
+    (not found), and fallback landing several shards to the right."""
+    from repro.core import successor_jit as core_succ
+
+    vals = np.asarray([10, 20, 350, 360], np.int32)   # shards 1, 2 empty
+    tcfg = TreeConfig(height=4, max_dnodes=64, buf_cap=8)
+    t = core_empty(tcfg)
+    t, _, _ = core_update(tcfg, t, jnp.full(4, 1, jnp.int32),
+                          jnp.asarray(vals))
+    q = jnp.asarray([150, 250, 25, 370, 360, 5, 20], jnp.int32)
+    cf, cv = core_succ(tcfg, t, q)
+    # oracle: owner-empty -> 350 (shards 1/2 empty), 25 -> 350 (fallback
+    # lands 3 shards right), 370/360-upper -> not found, 5 -> 10, 20 -> 350
+    np.testing.assert_array_equal(
+        np.asarray(cf), [True, True, True, False, False, True, True])
+    for engine, fused in (("scalar", False), ("scalar", True),
+                          ("lockstep", False), ("lockstep", True)):
+        fcfg = D.ForestConfig(
+            num_shards=4, key_max=400, fused=fused,
+            tree=dataclasses.replace(tcfg, engine=engine))
+        f = D.bulk_build(fcfg, vals, splits=np.asarray([100, 200, 300]))
+        assert D.live_keys(fcfg, f).tolist() == vals.tolist()
+        sf, sv = D.successor_jit(fcfg, f, q)
+        np.testing.assert_array_equal(np.asarray(sf), np.asarray(cf))
+        np.testing.assert_array_equal(np.asarray(sv)[np.asarray(sf)],
+                                      np.asarray(cv)[np.asarray(cf)])
 
 
 def test_equidepth_splits_balance():

@@ -1,0 +1,211 @@
+"""Fused cross-shard lockstep frontier ≡ dense vmap dispatch (DESIGN.md §8).
+
+The fused forest read path (one multi-root ``delta_walk`` frontier over the
+base-offset fusion of co-resident shard arenas) must be *bit-identical* to
+the dense per-shard vmap dispatch — found/payload/succ AND the per-query
+hops transfer statistic — on randomized op traces for S ∈ {1, 4, 8},
+including map-mode x64 and the real 8-fake-device shard_map leg
+(subprocess tests), and under deferred maintenance (the I5' buffered-floor
+fold restricted per lane to its owner shard).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import TreeConfig
+from repro.core.oracle import SetOracle
+from repro.distributed import forest as F
+from tests._subproc import run_py
+
+KEY_HI = 1000
+
+
+def _cfgs(num_shards, maintenance="eager"):
+    """(scalar/vmap, lockstep/vmap, lockstep/fused) forest configs over
+    one shared arena layout — reads on the same Forest state compare the
+    dispatch paths array-for-array."""
+
+    def mk(engine, fused):
+        return F.ForestConfig(
+            num_shards=num_shards, key_max=KEY_HI, fused=fused,
+            tree=TreeConfig(height=4, max_dnodes=256, buf_cap=8,
+                            engine=engine, maintenance=maintenance))
+
+    return mk("scalar", True), mk("lockstep", False), mk("lockstep", True)
+
+
+def _assert_reads_agree(fc_ref, fc_fused, f, q):
+    a = F.search_batch(fc_ref, f, q)
+    b = F.search_batch(fc_fused, f, q)
+    for x, y in zip(a, b):   # found AND hops, bit for bit
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    sa = F.successor_jit(fc_ref, f, q)
+    sb = F.successor_jit(fc_fused, f, q)
+    for x, y in zip(sa, sb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("num_shards", [1, 4, 8])
+def test_fused_matches_vmap_dispatch(num_shards):
+    """Randomized op trace: every read step compares the fused frontier
+    against BOTH vmap dispatches (scalar + lockstep engines) and the
+    oracle — found, hops, successor, all bit for bit."""
+    fc_s, fc_v, fc_f = _cfgs(num_shards)
+    rng = np.random.default_rng(31 + num_shards)
+    initial = np.unique(rng.integers(1, KEY_HI, 200).astype(np.int32))
+    f = F.bulk_build(fc_s, initial)
+    oracle = SetOracle(initial)
+    for _ in range(5):
+        q = jnp.asarray(rng.integers(0, KEY_HI + 50, 64).astype(np.int32))
+        _assert_reads_agree(fc_s, fc_f, f, q)
+        _assert_reads_agree(fc_v, fc_f, f, q)
+        found, _ = F.search_batch(fc_f, f, q)
+        np.testing.assert_array_equal(
+            np.asarray(found), oracle.snapshot_search(np.asarray(q)))
+        kinds = rng.choice([1, 2], 32).astype(np.int32)
+        keys = rng.integers(1, KEY_HI, 32).astype(np.int32)
+        f, res, _ = F.update_batch(fc_s, f, jnp.asarray(kinds),
+                                   jnp.asarray(keys))
+        np.testing.assert_array_equal(np.asarray(res),
+                                      oracle.apply_updates(kinds, keys))
+    live = oracle.keys()
+    q = np.asarray(rng.integers(0, KEY_HI + 100, 96).astype(np.int32))
+    sf, sv = F.successor_jit(fc_f, f, jnp.asarray(q))
+    idx = np.searchsorted(live, q, side="right")
+    ef = idx < live.size
+    np.testing.assert_array_equal(np.asarray(sf), ef)
+    np.testing.assert_array_equal(
+        np.asarray(sv)[ef], live[np.minimum(idx, live.size - 1)][ef])
+
+
+def test_fused_deferred_maintenance_reads():
+    """Under deferred maintenance (I5': pending items live in overflow
+    buffers) the fused path folds each lane's *owner-shard* buffered
+    floor — a later shard's pending item must arrive via the cross-shard
+    fallback, never directly — and stays bit-identical to vmap."""
+    fc_s, fc_v, fc_f = _cfgs(4, maintenance="deferred")
+    rng = np.random.default_rng(37)
+    vals = np.unique(rng.integers(1, KEY_HI, 250).astype(np.int32))
+    f = F.bulk_build(fc_s, vals)
+    for _ in range(4):
+        kinds = rng.choice([1, 2], 48).astype(np.int32)
+        keys = rng.integers(1, KEY_HI, 48).astype(np.int32)
+        f, _, _ = F.update_batch(fc_s, f, jnp.asarray(kinds),
+                                 jnp.asarray(keys))
+    assert int(np.asarray(f.trees.bcount).sum()) > 0, \
+        "trace should leave buffered items"
+    q = jnp.asarray(rng.integers(0, KEY_HI + 50, 160).astype(np.int32))
+    _assert_reads_agree(fc_v, fc_f, f, q)
+    _assert_reads_agree(fc_s, fc_f, f, q)
+    # buffered items are live through the fused read path
+    live = F.live_keys(fc_s, f)
+    idx = np.searchsorted(live, np.asarray(q), side="right")
+    ef = idx < live.size
+    sf, sv = F.successor_jit(fc_f, f, q)
+    np.testing.assert_array_equal(np.asarray(sf), ef)
+    np.testing.assert_array_equal(
+        np.asarray(sv)[ef], live[np.minimum(idx, live.size - 1)][ef])
+
+
+def test_fused_capability_and_dispatch_selection():
+    """Capability.fused_forest reflects engine × fused flag; the scalar
+    engine (no forest_batch) always reads through the vmap dispatch."""
+    from repro.api import make_index
+
+    initial = np.asarray([5, 9, 40], np.int32)
+    kw = dict(initial=initial, num_shards=2, height=4, max_dnodes=64,
+              buf_cap=8, key_max=64)
+    assert make_index("forest", engine="lockstep",
+                      **kw).capability.fused_forest
+    assert not make_index("forest", engine="lockstep", fused=False,
+                          **kw).capability.fused_forest
+    assert not make_index("forest", engine="scalar",
+                          **kw).capability.fused_forest
+    assert not make_index("deltatree", engine="lockstep", initial=initial,
+                          height=4, max_dnodes=64).capability.fused_forest
+
+
+def test_fused_map_mode_x64():
+    out = run_py("""
+import numpy as np, jax.numpy as jnp
+from repro.core import TreeConfig
+from repro.core.oracle import MapOracle
+from repro.distributed import forest as F
+
+def mk(engine, fused):
+    return F.ForestConfig(num_shards=4, key_max=600, fused=fused,
+                          tree=TreeConfig(height=4, max_dnodes=256, buf_cap=8,
+                                          payload_bits=8, engine=engine))
+fc_s, fc_v, fc_f = mk("scalar", True), mk("lockstep", False), mk("lockstep", True)
+rng = np.random.default_rng(41)
+vals = np.unique(rng.integers(1, 600, 200).astype(np.int32))
+pays = rng.integers(0, 255, vals.size).astype(np.int32)
+f = F.bulk_build(fc_s, vals, pays)
+oracle = MapOracle(zip(vals, pays))
+for _ in range(4):
+    kinds = rng.integers(1, 3, 24).astype(np.int32)
+    keys = rng.integers(1, 600, 24).astype(np.int32)
+    pp = rng.integers(0, 255, 24).astype(np.int32)
+    q = jnp.asarray(rng.integers(0, 650, 64).astype(np.int32))
+    ref = F.lookup_batch(fc_v, f, q)
+    fus = F.lookup_batch(fc_f, f, q)
+    for a, b in zip(ref, fus):   # found, payload, hops
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ef, ep = oracle.snapshot_lookup(np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(fus[0]), ef)
+    np.testing.assert_array_equal(np.asarray(fus[1])[ef], ep[ef])
+    sa = F.successor_jit(fc_v, f, q)
+    sb = F.successor_jit(fc_f, f, q)
+    for a, b in zip(sa, sb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    f, _, _ = F.update_batch(fc_s, f, jnp.asarray(kinds), jnp.asarray(keys),
+                             jnp.asarray(pp))
+    oracle.apply_updates(kinds, keys, pp)
+print("FUSED MAP MODE OK")
+""", x64=True)
+    assert "FUSED MAP MODE OK" in out
+
+
+def test_fused_shard_map_8_devices():
+    """The fused frontier under a real multi-device mesh: the batch
+    bucket-sorts by owner *device* ((D, K) lanes, not (S, K)) and each
+    device fuses its co-resident shards — S=4 exercises 1 shard/device on
+    a 4-mesh, S=8 a full 8-mesh; both must match vmap and the oracle."""
+    out = run_py("""
+import jax, numpy as np, jax.numpy as jnp
+assert jax.device_count() == 8, jax.devices()
+from repro.core import TreeConfig
+from repro.core.oracle import SetOracle
+from repro.distributed import forest as F
+from repro.distributed.router import forest_mesh
+
+rng = np.random.default_rng(43)
+for S in (4, 8):
+    assert forest_mesh(S).devices.size == S
+    def mk(engine, fused):
+        return F.ForestConfig(num_shards=S, key_max=800, fused=fused,
+                              tree=TreeConfig(height=4, max_dnodes=128,
+                                              buf_cap=8, engine=engine))
+    fc_s, fc_v, fc_f = mk("scalar", True), mk("lockstep", False), mk("lockstep", True)
+    vals = np.unique(rng.integers(1, 800, 300).astype(np.int32))
+    f = F.bulk_build(fc_s, vals)
+    oracle = SetOracle(vals)
+    for _ in range(3):
+        kinds = rng.integers(1, 3, 32).astype(np.int32)
+        keys = rng.integers(1, 800, 32).astype(np.int32)
+        q = jnp.asarray(rng.integers(0, 850, 96).astype(np.int32))
+        for ref in (fc_s, fc_v):
+            a = F.search_batch(ref, f, q); b = F.search_batch(fc_f, f, q)
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+            sa = F.successor_jit(ref, f, q); sb = F.successor_jit(fc_f, f, q)
+            for x, y in zip(sa, sb):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        found, _ = F.search_batch(fc_f, f, q)
+        assert (np.asarray(found) == oracle.snapshot_search(np.asarray(q))).all()
+        f, res, _ = F.update_batch(fc_s, f, jnp.asarray(kinds), jnp.asarray(keys))
+        assert (np.asarray(res) == oracle.apply_updates(kinds, keys)).all()
+print("FUSED SHARD_MAP OK")
+""", devices=8)
+    assert "FUSED SHARD_MAP OK" in out

@@ -19,6 +19,7 @@ with an explicit row rather than silently falling back.
 
 from __future__ import annotations
 
+import functools
 import json
 import time
 
@@ -35,6 +36,27 @@ DEFAULT_SEED = 0
 # sub-batch (padded with OP_SEARCH no-ops, so shapes stay static).
 CHUNKED_BACKENDS = {"sorted_array", "pointer_bst", "static_veb"}
 UPDATE_CHUNK = 64
+
+# Backends whose configs carry the static ``collect_stats`` knob:
+# run_index turns it on by default so every perf row carries its hop /
+# round / router telemetry (repro.obs) alongside the timing.
+STATS_BACKENDS = {"deltatree", "forest"}
+
+
+@functools.lru_cache(maxsize=1)
+def exec_meta() -> dict:
+    """Execution-mode stamp merged into every emitted row: numbers from a
+    CPU-interpret run and a TPU-compiled run must never be comparable
+    silently.  Cached per process — the serve bench's x64 subprocess
+    stamps its own rows with its own (x64=True) view."""
+    from repro.kernels.ops import default_interpret
+
+    return {
+        "device_kind": jax.devices()[0].device_kind,
+        "interpret": bool(default_interpret()),
+        "x64": bool(jax.config.jax_enable_x64),
+        "jax_version": jax.__version__,
+    }
 
 
 def add_common_args(ap) -> None:
@@ -79,7 +101,9 @@ def dispatch_of(ix) -> str | None:
 
 
 def emit(row: dict) -> dict:
-    """One machine-parsable JSON row per result line."""
+    """One machine-parsable JSON row per result line, stamped with the
+    process's execution mode (`exec_meta`; row keys win on collision)."""
+    row = {**exec_meta(), **row}
     print(json.dumps(row), flush=True)
     return row
 
@@ -134,21 +158,38 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
     scheduler policy (both validated by ``make_index``; None = backend
     defaults).  ``flush_every`` > 0 drains deferred/budgeted maintenance
     every N steps *inside the timed loop* (the serving amortization
-    pattern), so non-eager rows pay their structural work honestly."""
+    pattern), so non-eager rows pay their structural work honestly.
+
+    Warmup (compile) runs fully off the steady-state clock — blocked to
+    completion and reported separately as ``compile_seconds`` — so
+    ``ops_per_s`` is a pure steady-state number.  Stats-capable backends
+    (`STATS_BACKENDS`) collect ``repro.obs`` read telemetry by default
+    (merged device-side across the counted loop; one host sync at the
+    end), giving every perf row its hop / round / router columns."""
+    if backend in STATS_BACKENDS:
+        make_kw.setdefault("collect_stats", True)
     ix = make_index(backend, initial=initial, engine=engine,
                     maintenance=maintenance, **make_kw)
+    collect = bool(getattr(ix, "collect_stats", False))
     rng = np.random.default_rng(seed)
     chunked = backend in CHUNKED_BACKENDS
     any_update = update_pct > 0
 
     def one_step(ix, count=False):
-        nonlocal n_search, n_update
+        nonlocal n_search, n_update, sacc, racc
         kinds = mixed_kinds(rng, batch, update_pct)
         keys = rng.integers(1, key_hi, size=batch).astype(np.int32)
         # fixed shapes: searches on the whole batch (wait-free snapshot);
         # updates ride a whole fixed-shape batch too, with OP_SEARCH rows
         # as no-ops — avoids per-step recompiles from dynamic sub-batches
-        found, _ = ix.search(jnp.asarray(keys))
+        res = ix.search(jnp.asarray(keys))
+        found = res[0]
+        if collect and count:
+            # device-side accumulation (merge): no host sync mid-loop
+            rs = res[-1]
+            sacc = rs.search if sacc is None else sacc.merge(rs.search)
+            if rs.router is not None:
+                racc = rs.router if racc is None else racc.merge(rs.router)
         n_upd_step = 0
         if any_update:
             uidx = np.flatnonzero(kinds != 0)
@@ -165,15 +206,22 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
         return ix, found
 
     n_search = n_update = 0
+    sacc = racc = None
     # warmup compile — two iterations: a sharded backend's first update
     # output carries mesh shardings the host-built input didn't, so the
-    # second call retraces once; after that the jit cache is steady
+    # second call retraces once; after that the jit cache is steady.
+    # Blocked and timed separately (``compile_seconds``) so no async
+    # warmup work leaks into the steady-state clock.
+    tc = time.perf_counter()
     for _ in range(2):
         ix, found = one_step(ix)
-    n_search = n_update = 0
-
     if flush_every:  # warm the flush compile too, off the clock
         ix, _ = ix.flush()
+    jax.block_until_ready(
+        [x for x in jax.tree.leaves(ix.state) if hasattr(x, "block_until_ready")])
+    found.block_until_ready()
+    compile_seconds = time.perf_counter() - tc
+    n_search = n_update = 0
 
     steps = max(total_ops // batch, 1)
     t0 = time.perf_counter()
@@ -190,11 +238,22 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
         [x for x in jax.tree.leaves(ix.state) if hasattr(x, "block_until_ready")])
     found.block_until_ready()
     dt = time.perf_counter() - t0
-    return {"backend": backend, "engine": ix.engine,
-            "dispatch": dispatch_of(ix),
-            "maintenance": ix.maintenance, "q_tile": resolved_q_tile(ix),
-            "flush_every": flush_every,
-            "seed": seed, "update_pct": update_pct, "batch": batch,
-            "ops_per_s": round((n_search + n_update) / dt, 1),
-            "seconds": round(dt, 4), "n_search": n_search,
-            "n_update": n_update}
+    row = {"backend": backend, "engine": ix.engine,
+           "dispatch": dispatch_of(ix),
+           "maintenance": ix.maintenance, "q_tile": resolved_q_tile(ix),
+           "flush_every": flush_every,
+           "seed": seed, "update_pct": update_pct, "batch": batch,
+           "ops_per_s": round((n_search + n_update) / dt, 1),
+           "seconds": round(dt, 4),
+           "compile_seconds": round(compile_seconds, 4),
+           "n_search": n_search, "n_update": n_update}
+    if sacc is not None:  # the one host sync, after the clock stopped
+        sd = sacc.asdict()
+        row.update(hops_mean=sd["hops_mean"], hops_max=sd["hops_max"],
+                   rounds=sd["rounds"], buffer_hits=sd["buffer_hits"],
+                   hops_hist=sd["hops_hist"])
+    if racc is not None:
+        rd = racc.asdict()
+        row.update(shard_lanes=rd["lanes"], shard_skew=rd["skew"],
+                   clamped=rd["clamped"])
+    return row

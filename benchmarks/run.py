@@ -52,7 +52,13 @@ def _consolidate(rows: list, args: dict) -> str:
     """Write BENCH_<timestamp>.json at the repo root: run metadata plus
     every row stamped with suite/backend/engine/maintenance.  Smoke runs
     get the gitignored ``BENCH_SMOKE_`` prefix — their numbers are
-    meaningless and must not pollute the committed perf trajectory."""
+    meaningless and must not pollute the committed perf trajectory.
+
+    The top-level ``meta`` block is this process's execution stamp
+    (`benchmarks.common.exec_meta`); per-row stamps still win — the serve
+    suite's rows come from an x64 subprocess whose mode differs."""
+    from benchmarks.common import exec_meta
+
     stamped = []
     for row in rows:
         r = dict(row)
@@ -65,8 +71,8 @@ def _consolidate(rows: list, args: dict) -> str:
     prefix = "BENCH_SMOKE_" if args.get("smoke") else "BENCH_"
     path = os.path.join(REPO_ROOT, f"{prefix}{ts}.json")
     with open(path, "w") as f:
-        json.dump({"timestamp": ts, "args": args, "rows": stamped}, f,
-                  indent=1)
+        json.dump({"timestamp": ts, "args": args, "meta": exec_meta(),
+                   "rows": stamped}, f, indent=1)
     print(f"# consolidated {len(stamped)} rows -> {path}", flush=True)
     return path
 
@@ -82,6 +88,10 @@ def main() -> None:
                          "|maint")
     ap.add_argument("--maintenance", default=None,
                     help="maint suite: run only this policy")
+    ap.add_argument("--trace-dir", default=None,
+                    help="capture an xprof trace of the whole run into "
+                         "this logdir (repro.obs.trace.capture; spans "
+                         "need REPRO_TRACE=1 in the environment)")
     add_common_args(ap)
     args, _ = ap.parse_known_args()
     quick = not args.full
@@ -107,30 +117,40 @@ def main() -> None:
             r["suite"] = suite
             rows.append(r)
 
+    if args.trace_dir:
+        from repro.obs import trace as OT
+
+        cm = OT.capture(args.trace_dir)
+    else:
+        import contextlib
+
+        cm = contextlib.nullcontext()
+
     common = dict(quick=quick, seed=seed, backend=backend, engine=engine,
                   smoke=smoke)
-    if "table1" in todo:
-        add("table1", table1_transfers.main(**common))
-    if "ub_sweep" in todo:
-        add("ub_sweep", ub_sweep.main(**common))
-    if "fig11" in todo:
-        add("fig11", fig11_small_tree.main(**common))
-    if "fig12" in todo:
-        add("fig12", fig12_big_tree.main(**common))
-    if "serve" in todo:
-        add("serve", _in_x64_subprocess("benchmarks.serve_paged", quick,
-                                        seed, backend, engine, smoke))
-    if "forest" in todo:
-        add("forest", forest_scale.main(quick=quick, seed=seed,
-                                        engine=engine, smoke=smoke))
-    if "engines" in todo:
-        add("engines", engine_compare.main(quick=quick, seed=seed,
-                                           backend=backend, smoke=smoke))
-    if "maint" in todo:
-        add("maint", maint_sweep.main(quick=quick, seed=seed,
-                                      backend=backend, engine=engine,
-                                      maintenance=args.maintenance,
-                                      smoke=smoke))
+    with cm:
+        if "table1" in todo:
+            add("table1", table1_transfers.main(**common))
+        if "ub_sweep" in todo:
+            add("ub_sweep", ub_sweep.main(**common))
+        if "fig11" in todo:
+            add("fig11", fig11_small_tree.main(**common))
+        if "fig12" in todo:
+            add("fig12", fig12_big_tree.main(**common))
+        if "serve" in todo:
+            add("serve", _in_x64_subprocess("benchmarks.serve_paged", quick,
+                                            seed, backend, engine, smoke))
+        if "forest" in todo:
+            add("forest", forest_scale.main(quick=quick, seed=seed,
+                                            engine=engine, smoke=smoke))
+        if "engines" in todo:
+            add("engines", engine_compare.main(quick=quick, seed=seed,
+                                               backend=backend, smoke=smoke))
+        if "maint" in todo:
+            add("maint", maint_sweep.main(quick=quick, seed=seed,
+                                          backend=backend, engine=engine,
+                                          maintenance=args.maintenance,
+                                          smoke=smoke))
     _consolidate(rows, dict(full=args.full, smoke=smoke, seed=seed,
                             backend=backend, engine=engine,
                             only=args.only))

@@ -67,9 +67,13 @@ def run(steps: int = 10, seed: int = DEFAULT_SEED,
     jax.block_until_ready(lg)
     dense = (time.perf_counter() - t0) / steps
     s = eng.pager.stats
+    obs = eng.obs.asdict()  # ServeStats: latency reservoir + flush log
     return {"bench": "serve_paged", "backend": backend,
             "engine": eng.pager.index.engine, "seed": seed,
             "paged_step_us": round(dt * 1e6), "dense_step_us": round(dense * 1e6),
+            "p50_us": obs["p50_us"], "p99_us": obs["p99_us"],
+            "decode_steps": obs["steps"], "flushes": obs["flushes"],
+            "pending_hwm": obs["pending_hwm"],
             "pager_searches": s["searches"], "pager_inserts": s["inserts"],
             "pager_deletes": s["deletes"],
             "hops_per_search": round(s["hops"] / max(s["searches"], 1), 2)}

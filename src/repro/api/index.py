@@ -147,6 +147,13 @@ class Index:
         no maintenance scheduler)."""
         return cfg_attr(self.spec.cfg, "maintenance") or "eager"
 
+    @property
+    def collect_stats(self) -> bool:
+        """True when this handle's hop-bearing reads return a trailing
+        ``repro.obs.stats.ReadStats`` (``TreeConfig.collect_stats``;
+        always False for backends without the knob)."""
+        return bool(cfg_attr(self.spec.cfg, "collect_stats", False))
+
     def _require(self, flag: str, hook) -> None:
         if not getattr(self.capability, flag) or hook is None:
             raise CapabilityError(
@@ -156,11 +163,13 @@ class Index:
     # ---- wait-free reads ----
 
     def search(self, keys: jax.Array):
-        """Membership on the current snapshot. Returns (found[K], hops[K])."""
+        """Membership on the current snapshot. Returns (found[K], hops[K])
+        — plus a trailing ``ReadStats`` when ``self.collect_stats``."""
         return self.spec.backend.search(self.spec.cfg, self.state, keys)
 
     def lookup(self, keys: jax.Array):
-        """Map-mode read. Returns (found[K], payload[K], hops[K])."""
+        """Map-mode read. Returns (found[K], payload[K], hops[K]) — plus
+        a trailing ``ReadStats`` when ``self.collect_stats``."""
         self._require("map_mode", self.spec.backend.lookup)
         return self.spec.backend.lookup(self.spec.cfg, self.state, keys)
 

@@ -89,6 +89,11 @@ class TreeConfig:
                   ``repro.maintenance``.
     q_tile:       lockstep kernel query tile; 0 = auto (the
                   ``REPRO_PALLAS_QTILE`` env override, else 256).
+    collect_stats: observability flag (``repro.obs``): stats-capable
+                  reads (search/lookup, forest reads) return a trailing
+                  ``ReadStats`` counter pytree.  Static, so the disabled
+                  path traces exactly the pre-obs graph — byte-identical
+                  lowered HLO (asserted by tests/test_obs.py).
     """
 
     height: int = 7           # UB = 127, the paper's best (page-sized) ΔNode
@@ -100,6 +105,7 @@ class TreeConfig:
     engine: str = "scalar"    # read-path SearchEngine (core.engine registry)
     maintenance: str = "eager"  # scheduler policy (repro.maintenance)
     q_tile: int = 0           # lockstep kernel tile (0 = env/default)
+    collect_stats: bool = False  # reads return ReadStats (repro.obs)
 
     @property
     def maintenance_policy(self):
@@ -960,6 +966,35 @@ def buffered_floor(cfg: TreeConfig, t: DeltaTree, keys: jax.Array):
 
     def drained(_):
         return jnp.full(keys.shape, cfg.route_left, cfg.vdtype)
+
+    return jax.lax.cond(jnp.any(t.bcount > 0), with_items, drained, None)
+
+
+def buffered_member(cfg: TreeConfig, t: DeltaTree, keys: jax.Array):
+    """True per key iff the key is pending in some ΔNode's overflow
+    buffer (I5' trees).  Leaves and buffers are disjoint (inserts dedup
+    against both), so ``found & buffered_member`` is exactly "resolved
+    via the buffer" — the ``SearchStats.buffer_hits`` column
+    (``repro.obs``), computed in the engine dispatch so it cannot drift
+    between engines.  Same shape as `buffered_floor`: one global sort of
+    the buffer arena + a searchsorted per query, skipped entirely in the
+    common drained state."""
+    keys = jnp.asarray(keys, jnp.int32)
+    in_domain = (keys >= layout.KEY_MIN) & (keys <= layout.KEY_MAX)
+
+    def with_items(_):
+        flat = jnp.where(t.buf != EMPTY, t.buf, cfg.route_left).reshape(-1)
+        s = jnp.sort(flat)
+        # pack with payload 0: the smallest packed value of this key, so
+        # side="left" lands on the key's first stored entry if any
+        qlow = cfg.pack(keys, jnp.zeros_like(keys))
+        idx = jnp.searchsorted(s, qlow, side="left").astype(jnp.int32)
+        safe = jnp.clip(idx, 0, s.shape[0] - 1)
+        hit = (idx < s.shape[0]) & (cfg.key_of(s[safe]) == keys)
+        return hit & in_domain
+
+    def drained(_):
+        return jnp.zeros(keys.shape, jnp.bool_)
 
     return jax.lax.cond(jnp.any(t.bcount > 0), with_items, drained, None)
 

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from repro.core import deltatree as DT
 from repro.core import layout
 from repro.core.layout import EMPTY
+from repro.obs import trace as TR
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,19 +128,60 @@ def available_engines() -> list[str]:
 # --------------------------------------------------------------------------
 
 
+def collecting(cfg) -> bool:
+    """Static observability gate (``TreeConfig.collect_stats``): checked
+    in Python at trace time, so the False path traces *exactly* the
+    pre-obs graph — the HLO-identity contract tests/test_obs.py holds us
+    to.  Configs without the field (baselines) never collect."""
+    return bool(getattr(cfg, "collect_stats", False))
+
+
+def _read_stats(cfg, t, keys, found, hops):
+    """The trailing ``ReadStats`` of a stats-collecting read, derived
+    from the dispatch's own outputs: both engines produce bit-identical
+    (found, hops) columns (the conformance contract), so the histogram /
+    occupancy / buffer-hit parity between engines is structural."""
+    from repro.obs.stats import ReadStats, SearchStats
+
+    keys32 = jnp.asarray(keys, jnp.int32)
+    pad = keys32 == layout.ROUTE_LEFT
+    bhit = found & DT.buffered_member(cfg, t, keys32)
+    return ReadStats(search=SearchStats.of(hops, pad, bhit))
+
+
+def lookup_cols(cfg, t, keys: jax.Array):
+    """The bare engine hook call — always the 3-tuple, never stats.  The
+    forest's dense per-shard dispatch reads through this so stats are
+    derived exactly once, in the forest's own dispatch layer (mirroring
+    the fused path, which also calls raw hooks)."""
+    with TR.annotate(f"engine.{cfg.engine}.lookup"):
+        return get_engine(cfg.engine).lookup(cfg, t, keys)
+
+
 def lookup(cfg, t, keys: jax.Array):
-    """Engine-dispatched map-mode read: (found[K], payload[K], hops[K])."""
-    return get_engine(cfg.engine).lookup(cfg, t, keys)
+    """Engine-dispatched map-mode read: (found[K], payload[K], hops[K]),
+    plus a trailing ``ReadStats`` when ``cfg.collect_stats``."""
+    out = lookup_cols(cfg, t, keys)
+    if not collecting(cfg):
+        return out
+    found, payload, hops = out
+    return found, payload, hops, _read_stats(cfg, t, keys, found, hops)
 
 
 def search(cfg, t, keys: jax.Array):
-    """Engine-dispatched membership read: (found[K], hops[K])."""
-    found, _, hops = lookup(cfg, t, keys)
-    return found, hops
+    """Engine-dispatched membership read: (found[K], hops[K]), plus a
+    trailing ``ReadStats`` when ``cfg.collect_stats``."""
+    if not collecting(cfg):
+        found, _, hops = lookup(cfg, t, keys)
+        return found, hops
+    found, _, hops, stats = lookup(cfg, t, keys)
+    return found, hops, stats
 
 
 def successor(cfg, t, keys: jax.Array):
-    """Engine-dispatched ordered read: (found[K], succ[K]).
+    """Engine-dispatched ordered read: (found[K], succ[K]) — no stats
+    variant: ``ReadStats`` rides the hop-bearing reads only (successor
+    reports no transfer column to derive them from).
 
     Under a non-eager maintenance policy the tree may carry pending items
     in overflow buffers (invariant I5'); those are invisible to the router
@@ -150,7 +192,8 @@ def successor(cfg, t, keys: jax.Array):
     trees skip the fold (buffers are empty between steps — I5), keeping
     the pre-subsystem read bit-identical.
     """
-    found, succ = get_engine(cfg.engine).successor(cfg, t, keys)
+    with TR.annotate(f"engine.{cfg.engine}.successor"):
+        found, succ = get_engine(cfg.engine).successor(cfg, t, keys)
     policy = getattr(cfg, "maintenance", "eager")
     if policy == "eager" or not hasattr(cfg, "route_left"):
         return found, succ

@@ -84,10 +84,17 @@ class ForestConfig:
 
 class Forest(NamedTuple):
     """Stacked-arena pytree: every DeltaTree leaf gains a leading (S,) axis;
-    ``splits`` is the (S-1,) boundary array the router searchsorts."""
+    ``splits`` is the (S-1,) boundary array the router searchsorts.
+
+    ``reads``/``updates`` are cumulative per-shard (S,) op counters (the
+    obs subsystem's skew view — `shard_load`).  Updates auto-count inside
+    `update_batch`; reads are pure, so read batches only accumulate when
+    the caller opts in via the `record_reads` state transition."""
 
     trees: DeltaTree
     splits: jax.Array
+    reads: jax.Array      # (S,) int32 — ops recorded via `record_reads`
+    updates: jax.Array    # (S,) int32 — non-search rows seen by `update_batch`
 
 
 def _stack(trees: list[DeltaTree]) -> DeltaTree:
@@ -113,9 +120,14 @@ def _as_splits(fcfg: ForestConfig, splits) -> jax.Array:
 # --------------------------------------------------------------------------
 
 
+def _zero_counters(fcfg: ForestConfig) -> jax.Array:
+    return jnp.zeros((fcfg.num_shards,), jnp.int32)
+
+
 def empty(fcfg: ForestConfig, splits=None) -> Forest:
     trees = _stack([DT.empty(fcfg.tree) for _ in range(fcfg.num_shards)])
-    return Forest(trees=trees, splits=_as_splits(fcfg, splits))
+    return Forest(trees=trees, splits=_as_splits(fcfg, splits),
+                  reads=_zero_counters(fcfg), updates=_zero_counters(fcfg))
 
 
 def bulk_build(fcfg: ForestConfig, values: np.ndarray,
@@ -141,7 +153,8 @@ def bulk_build(fcfg: ForestConfig, values: np.ndarray,
         trees.append(DT.bulk_build(
             fcfg.tree, values[mask],
             payloads[mask] if payloads is not None else None))
-    return Forest(trees=_stack(trees), splits=_as_splits(fcfg, splits))
+    return Forest(trees=_stack(trees), splits=_as_splits(fcfg, splits),
+                  reads=_zero_counters(fcfg), updates=_zero_counters(fcfg))
 
 
 # --------------------------------------------------------------------------
@@ -175,19 +188,48 @@ def _fused(fcfg: ForestConfig):
 
 @functools.partial(jax.jit, static_argnums=0)
 def search_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
-    """Routed wait-free search. Returns (found[K], hops[K])."""
-    found, _, hops = _lookup(fcfg, f, keys)
+    """Routed wait-free search. Returns (found[K], hops[K]) — plus a
+    trailing `ReadStats` when ``fcfg.tree.collect_stats`` is on."""
+    out = _lookup(fcfg, f, keys)
+    if E.collecting(fcfg.tree):
+        found, _, hops, stats = out
+        return found, hops, stats
+    found, _, hops = out
     return found, hops
 
 
 @functools.partial(jax.jit, static_argnums=0)
 def lookup_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
-    """Routed map-mode lookup. Returns (found[K], payload[K], hops[K])."""
+    """Routed map-mode lookup. Returns (found[K], payload[K], hops[K]) —
+    plus a trailing `ReadStats` when ``fcfg.tree.collect_stats`` is on."""
     return _lookup(fcfg, f, keys)
 
 
+def _forest_read_stats(fcfg: ForestConfig, f: Forest, raw, keys, sid,
+                       found, hops):
+    """Forest `ReadStats` from batch-order read columns (obs tentpole).
+
+    Computed on the *gathered* batch-order (found, hops) so both dispatch
+    paths (fused frontier / dense vmap) produce bit-identical stats —
+    same structural argument as the single-tree dispatch layer.  The
+    router leg adds per-shard lane counts plus how many caller keys the
+    key-domain clamp (`_route_keys`) rewrote."""
+    from repro.obs.stats import ReadStats, RouterStats, SearchStats
+
+    pad = keys == _PAD_KEY
+    member = jax.vmap(lambda t: DT.buffered_member(fcfg.tree, t, keys))(
+        f.trees)  # (S, K) buffered membership; pick each lane's owner shard
+    bhit = found & member[sid, jnp.arange(keys.shape[0])]
+    clamped = jnp.sum((raw != keys.astype(raw.dtype)).astype(jnp.int32))
+    return ReadStats(
+        search=SearchStats.of(hops, pad, bhit),
+        router=RouterStats.of(R.lane_counts(sid, fcfg.num_shards), clamped),
+    )
+
+
 def _lookup(fcfg: ForestConfig, f: Forest, keys: jax.Array):
-    keys = _route_keys(keys)
+    raw = jnp.asarray(keys)
+    keys = _route_keys(raw)
     fb = _fused(fcfg)
     if fb is not None:
         # fused frontier: batch order end to end, one kernel launch per
@@ -199,16 +241,25 @@ def _lookup(fcfg: ForestConfig, f: Forest, keys: jax.Array):
 
         r, lane, _ = R.fused_dispatch(fcfg.num_shards, per_device,
                                       f.trees, sid, keys)
-        return R.gather_fused(r, lane)
-    r = R.route(f.splits, keys)
-    dkeys = R.scatter_dense(r, fcfg.num_shards, keys, _PAD_KEY)
+        found, pay, hops = R.gather_fused(r, lane)
+    else:
+        r = R.route(f.splits, keys)
+        sid = r.sid
+        dkeys = R.scatter_dense(r, fcfg.num_shards, keys, _PAD_KEY)
 
-    def per_shard(t, ks):
-        return DT.lookup_batch(fcfg.tree, t, ks)
+        def per_shard(t, ks):
+            # bare engine hook (always 3-tuple): stats derive once below,
+            # from batch-order columns, not per shard inside the dispatch
+            return E.lookup_cols(fcfg.tree, t, ks)
 
-    found, pay, hops = R.dispatch(fcfg.num_shards, per_shard, f.trees, dkeys)
-    return (R.gather_batch(r, found), R.gather_batch(r, pay),
-            R.gather_batch(r, hops))
+        found, pay, hops = R.dispatch(fcfg.num_shards, per_shard, f.trees,
+                                      dkeys)
+        found, pay, hops = (R.gather_batch(r, found), R.gather_batch(r, pay),
+                            R.gather_batch(r, hops))
+    if not E.collecting(fcfg.tree):
+        return found, pay, hops
+    return found, pay, hops, _forest_read_stats(fcfg, f, raw, keys, sid,
+                                                found, hops)
 
 
 def _succ_combine(sid, f_owner, s_owner, has_min, mins):
@@ -307,7 +358,12 @@ def update_batch(fcfg: ForestConfig, f: Forest, kinds: jax.Array,
 
     trees, dres, stats = R.dispatch(s, per_shard, f.trees, dkinds, dkeys,
                                     dpays, sequential=True)
-    return (Forest(trees=trees, splits=f.splits),
+    # per-shard cumulative update counters: non-search rows post in-domain
+    # masking (a clamped-out row never reaches a shard's update kernel)
+    upd = jnp.zeros((s,), jnp.int32).at[r.sid].add(
+        (kinds != OP_SEARCH).astype(jnp.int32))
+    return (Forest(trees=trees, splits=f.splits,
+                   reads=f.reads, updates=f.updates + upd),
             R.gather_batch(r, dres), MaintenanceStats.reduce(stats))
 
 
@@ -321,8 +377,30 @@ def flush(fcfg: ForestConfig, f: Forest, budget: int = 64):
 
     trees, stats = R.dispatch(fcfg.num_shards, per_shard, f.trees,
                               sequential=True)
-    return (Forest(trees=trees, splits=f.splits),
+    return (Forest(trees=trees, splits=f.splits,
+                   reads=f.reads, updates=f.updates),
             MaintenanceStats.reduce(stats))
+
+
+# --------------------------------------------------------------------------
+# per-shard load counters (obs)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+def record_reads(fcfg: ForestConfig, f: Forest, keys: jax.Array) -> Forest:
+    """Fold one read batch into the cumulative per-shard ``reads``
+    counters.  Reads themselves are pure (wait-free snapshots), so
+    accumulation is an explicit state transition the serving/benchmark
+    loop opts into — the read path never grows a hidden side effect."""
+    sid = R.shard_ids(f.splits, _route_keys(keys))
+    return f._replace(reads=f.reads + R.lane_counts(sid, fcfg.num_shards))
+
+
+def shard_load(f: Forest) -> dict:
+    """Host-side view of the cumulative per-shard op counters."""
+    return {"reads": np.asarray(f.reads).tolist(),
+            "updates": np.asarray(f.updates).tolist()}
 
 
 # --------------------------------------------------------------------------

@@ -39,6 +39,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import layout
+from repro.obs import trace as TR
 from repro.parallel import make_forest_mesh
 
 
@@ -82,6 +83,13 @@ def route_by(ids: jax.Array, num_buckets: int) -> Routing:
     ).astype(jnp.int32)
     local = jnp.arange(k, dtype=jnp.int32) - offsets[ids_sorted]
     return Routing(ids, order, ids_sorted, local)
+
+
+def lane_counts(ids: jax.Array, num_buckets: int) -> jax.Array:
+    """Per-bucket lane counts of one routed batch ((num_buckets,) int32)
+    — the router leg of ``ReadStats`` and the forest's per-shard load
+    counters share this one scatter-add."""
+    return jnp.zeros((num_buckets,), jnp.int32).at[ids].add(1)
 
 
 def scatter_dense(r: Routing, num_shards: int, x: jax.Array, fill) -> jax.Array:
@@ -134,12 +142,13 @@ def dispatch(num_shards: int, fn, trees, *dense_args, sequential=False):
         return jax.vmap(fn)(trees_loc, *args_loc)
 
     nargs = 1 + len(dense_args)
-    return shard_map(
-        body, mesh=mesh,
-        in_specs=(P("shards"),) * nargs,
-        out_specs=P("shards"),
-        check_rep=False,
-    )(trees, *dense_args)
+    with TR.annotate("router.dispatch"):
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P("shards"),) * nargs,
+            out_specs=P("shards"),
+            check_rep=False,
+        )(trees, *dense_args)
 
 
 def fused_dispatch(num_shards: int, fn, trees, sid, keys):
@@ -168,7 +177,8 @@ def fused_dispatch(num_shards: int, fn, trees, sid, keys):
     mesh = forest_mesh(num_shards)
     d = mesh.devices.size
     if d == 1:
-        lane, per_shard = fn(trees, sid, keys)
+        with TR.annotate("router.fused"):
+            lane, per_shard = fn(trees, sid, keys)
         return None, lane, per_shard
     sloc = num_shards // d
     r = route_by(sid // jnp.int32(sloc), d)
@@ -181,12 +191,13 @@ def fused_dispatch(num_shards: int, fn, trees, sid, keys):
         # them to (D, K); per-shard leaves concatenate to (S,) directly
         return jax.tree.map(lambda x: x[None], lane), per_shard
 
-    lane, per_shard = shard_map(
-        body, mesh=mesh,
-        in_specs=(P("shards"),) * 3,
-        out_specs=P("shards"),
-        check_rep=False,
-    )(trees, dlid, dkeys)
+    with TR.annotate("router.fused"):
+        lane, per_shard = shard_map(
+            body, mesh=mesh,
+            in_specs=(P("shards"),) * 3,
+            out_specs=P("shards"),
+            check_rep=False,
+        )(trees, dlid, dkeys)
     return r, lane, per_shard
 
 

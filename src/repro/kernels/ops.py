@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro.core import layout
 from repro.kernels.delta_paged_attention import paged_decode_attention  # noqa: F401
 from repro.kernels.veb_search import pad_arena, veb_walk_rows, walk_big
+from repro.obs import trace as TR
 
 
 def default_interpret() -> bool:
@@ -133,10 +134,11 @@ def delta_walk(value: jax.Array, child: jax.Array, root: jax.Array,
                 bound; ``walk_big(dtype)`` = the dtype's ROUTE_LEFT when no
                 left turn happened)
     """
-    return _delta_walk(value, child, root, queries, height=height,
-                       q_tile=_resolve_q_tile(q_tile),
-                       max_rounds=max_rounds,
-                       interpret=_resolve_interpret(interpret))
+    with TR.annotate("delta_walk"):
+        return _delta_walk(value, child, root, queries, height=height,
+                           q_tile=_resolve_q_tile(q_tile),
+                           max_rounds=max_rounds,
+                           interpret=_resolve_interpret(interpret))
 
 
 @functools.partial(
@@ -172,13 +174,17 @@ def _delta_walk(value, child, root, queries, *, height, q_tile, max_rounds,
         return jnp.any(~s["resolved"]) & (s["rounds"] < max_rounds)
 
     def body(s):
-        dnc = jnp.clip(s["dn"], 0, value.shape[0] - 1)
-        rows = value_p[dnc]          # (K, UBp) — the per-query ΔNode DMA
-        childrows = child_p[dnc]
-        lv, lb, nxt, rcand = _row_walk(
-            rows, childrows, qpad, height=height, q_tile=q_tile,
-            interpret=interpret,
-        )
+        # REPRO_TRACE: names one frontier round in xprof (the paper's
+        # "one memory transfer") — gated at trace time, so flipping the
+        # env var between calls does not retrace cached programs
+        with TR.annotate("delta_walk.round"):
+            dnc = jnp.clip(s["dn"], 0, value.shape[0] - 1)
+            rows = value_p[dnc]      # (K, UBp) — the per-query ΔNode DMA
+            childrows = child_p[dnc]
+            lv, lb, nxt, rcand = _row_walk(
+                rows, childrows, qpad, height=height, q_tile=q_tile,
+                interpret=interpret,
+            )
         act = ~s["resolved"]
         done_now = act & (nxt < 0)
         return dict(

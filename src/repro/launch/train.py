@@ -1,6 +1,6 @@
 """End-to-end training driver (example-scale on CPU, production mesh on TPU).
 
-Features exercised here (DESIGN.md §9/§10):
+Features exercised here (DESIGN.md §10/§11):
 - sharded params (TP+FSDP rules) under a host mesh,
 - AdamW + cosine schedule + grad clip + grad accumulation,
 - deterministic-by-step data pipeline with prefetch,

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from repro.core import deltatree as DT
 from repro.maintenance.policy import MaintenancePolicy, parse_policy
 from repro.maintenance.stats import MaintenanceStats
+from repro.obs import trace as TR
 
 _Work = tuple  # (rebuilds, expands, merges) int32 scalars
 
@@ -247,9 +248,11 @@ def _run_eager(cfg, t, kinds, keys, payloads, results, pending, budget):
 
     def round_body(s):
         t, results, pending, rounds, work = s
-        t, results, pending, _ = _ops_phase(cfg, t, results, pending, kinds,
-                                            keys, payloads, budget)
-        t, work = _maint_phases(cfg, t, work, budget)
+        with TR.annotate("maint.ops"):
+            t, results, pending, _ = _ops_phase(cfg, t, results, pending,
+                                                kinds, keys, payloads, budget)
+        with TR.annotate("maint.sweep"):
+            t, work = _maint_phases(cfg, t, work, budget)
         return t, results, pending, rounds + 1, work
 
     t, results, pending, rounds, work = jax.lax.while_loop(
@@ -345,8 +348,10 @@ def _run_relaxed(cfg, policy: MaintenancePolicy, t, kinds, keys, payloads,
 
     def round_body(s):
         t, results, pending, rounds, work, repairs, residual = s
-        t, results, pending, dns = _ops_phase(cfg, t, results, pending,
-                                              kinds, keys, payloads, budget)
+        with TR.annotate("maint.ops"):
+            t, results, pending, dns = _ops_phase(cfg, t, results, pending,
+                                                  kinds, keys, payloads,
+                                                  budget)
         if vol:
             t, work, repairs, residual = jax.lax.cond(
                 (repairs < vol) & jnp.any((t.ins_flag | t.del_flag)
@@ -356,7 +361,8 @@ def _run_relaxed(cfg, policy: MaintenancePolicy, t, kinds, keys, payloads,
 
         def forced(args):
             t, work, residual = args
-            t, work, pmask = _ins_sweep(cfg, t, work, fmask, budget)
+            with TR.annotate("maint.sweep"):
+                t, work, pmask = _ins_sweep(cfg, t, work, fmask, budget)
             residual = (residual & ~pmask) | (pmask & (t.bcount > 0)
                                               & t.alive)
             return t, work, residual
@@ -420,7 +426,8 @@ def flush(cfg, t, budget: int = 64):
 
     def round_body(s):
         t, rounds, work = s
-        t, work = _maint_phases(cfg, t, work, budget)
+        with TR.annotate("maint.sweep"):
+            t, work = _maint_phases(cfg, t, work, budget)
         return t, rounds + 1, work
 
     t, rounds, work = jax.lax.while_loop(

@@ -1,65 +1,13 @@
-"""MaintenanceStats — per-update telemetry pytree.
+"""Backward-compatible re-export: ``MaintenanceStats`` lives in
+``repro.obs.stats`` now (the home of every counter pytree — the obs
+subsystem generalized this module's pattern into SearchStats /
+RouterStats / ServeStats).  Both historical import paths keep working
+unchanged:
 
-Returned (alongside the tree and per-op results) by every
-``update_batch`` / forest ``update_batch`` / ``Index.update`` call, and by
-``flush``.  All fields are int32 scalars (per-shard stats stack to (S,)
-under the forest dispatch and are reduced by ``MaintenanceStats.reduce``).
-
-Deprecation shim: the pre-subsystem contract returned a bare ``rounds``
-scalar as the third tuple element.  ``int(stats)`` (and ``__index__``)
-still yield ``rounds`` with a ``DeprecationWarning``, so host-side call
-sites written against the old 3-tuple keep working unchanged.
+    from repro.maintenance import MaintenanceStats
+    from repro.maintenance.stats import MaintenanceStats
 """
 
-from __future__ import annotations
+from repro.obs.stats import MaintenanceStats
 
-import warnings
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-
-class MaintenanceStats(NamedTuple):
-    """Why and how much maintenance ran during one update step."""
-
-    rounds: jax.Array    # () int32 — scheduler rounds taken
-    rebuilds: jax.Array  # () int32 — Rebalance mirror-swaps
-    expands: jax.Array   # () int32 — child ΔNodes allocated by Expand
-    merges: jax.Array    # () int32 — successful Merge splices
-    pending: jax.Array   # () int32 — buffered items carried forward (I5')
-
-    @classmethod
-    def zero(cls) -> "MaintenanceStats":
-        z = jnp.int32(0)
-        return cls(rounds=z, rebuilds=z, expands=z, merges=z, pending=z)
-
-    @classmethod
-    def reduce(cls, stacked: "MaintenanceStats") -> "MaintenanceStats":
-        """Aggregate per-shard (S,) stats: rounds is the critical path
-        (max over shards — shards run concurrently), work counters sum."""
-        return cls(
-            rounds=jnp.max(stacked.rounds),
-            rebuilds=jnp.sum(stacked.rebuilds),
-            expands=jnp.sum(stacked.expands),
-            merges=jnp.sum(stacked.merges),
-            pending=jnp.sum(stacked.pending),
-        )
-
-    def asdict(self) -> dict:
-        """Host-side plain-int view (for JSON benchmark rows / logging)."""
-        return {k: int(v) for k, v in self._asdict().items()}
-
-    # ---- deprecation shim: the old third tuple element was ``rounds`` ----
-
-    def __int__(self) -> int:
-        warnings.warn(
-            "update_batch now returns MaintenanceStats as its third "
-            "element; use stats.rounds instead of treating it as the "
-            "round count",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return int(self.rounds)
-
-    __index__ = __int__
+__all__ = ["MaintenanceStats"]

@@ -1,0 +1,43 @@
+"""repro.obs — cross-cutting observability (DESIGN.md §9).
+
+Three kinds of instrument, all zero-cost when off:
+
+- **Counter pytrees** (`obs.stats`): jit/shard_map-safe NamedTuples of
+  int32 counters riding the return path, generalizing the
+  ``MaintenanceStats`` pattern (which now lives here) — ``SearchStats``
+  for the read path, ``RouterStats`` for the forest router,
+  ``ServeStats`` for the decode loop.  Collection is gated by the
+  *static* ``TreeConfig.collect_stats`` flag: the disabled path lowers
+  to HLO byte-identical to a build without the stats code at all
+  (asserted by ``tests/test_obs.py``).
+- **Trace spans** (`obs.trace`): ``jax.profiler.TraceAnnotation`` /
+  ``jax.named_scope`` wrappers around engine dispatch, ``delta_walk``
+  rounds, router dispatch and maintenance phases, gated by the
+  ``REPRO_TRACE`` env var, plus an xprof trace-dump helper
+  (``obs.trace.capture``) for the compiled-performance campaign.
+- **Benchmark reports** (`obs.report`): a stdlib-only CLI that renders
+  consolidated ``BENCH_*.json`` files as per-suite tables and *diffs*
+  them against a baseline file (speedup deltas, regression flags)::
+
+      python -m repro.obs.report BENCH_NEW.json --diff BENCH_OLD.json
+"""
+
+from repro.obs import report, stats, trace
+from repro.obs.stats import (
+    MaintenanceStats,
+    ReadStats,
+    RouterStats,
+    SearchStats,
+    ServeStats,
+)
+
+__all__ = [
+    "MaintenanceStats",
+    "ReadStats",
+    "RouterStats",
+    "SearchStats",
+    "ServeStats",
+    "report",
+    "stats",
+    "trace",
+]

@@ -1,0 +1,89 @@
+"""Trace spans: profiler annotations for every layer, off by default.
+
+Gated by the ``REPRO_TRACE`` env var (unset/0 = every helper is a
+zero-cost ``nullcontext`` and traced programs lower byte-identically to
+an unannotated build).  With ``REPRO_TRACE=1``:
+
+- ``span(name)`` opens a host-side ``jax.profiler.TraceAnnotation`` *and*
+  a device-side ``jax.named_scope`` — use it around host-driven sections
+  (engine dispatch, a ServeEngine decode step).
+- ``annotate(name)`` opens only the ``named_scope`` — use it *inside*
+  traced functions (``delta_walk`` rounds, maintenance phases, the router
+  dispatch), where a host annotation would stamp trace time, not run time.
+  Callers under an outer jit bake the gate at their trace time: flipping
+  ``REPRO_TRACE`` does not retrace already-cached programs.
+- ``capture(logdir)`` wraps a region in ``jax.profiler.start_trace`` /
+  ``stop_trace`` — the xprof/perfetto trace-dump hook the ROADMAP's
+  compiled-performance campaign points at a device run (also reachable as
+  ``benchmarks/run.py --trace-dir``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+
+import jax
+
+ENV = "REPRO_TRACE"
+
+
+def enabled() -> bool:
+    """True when ``REPRO_TRACE`` asks for spans (read at call time)."""
+    env = os.environ.get(ENV, "").strip()
+    return bool(env) and env.lower() not in ("0", "false", "no")
+
+
+def annotate(name: str):
+    """Device-side scope: names the ops traced under it in HLO/xprof.
+    Safe anywhere (host or trace time); nullcontext when disabled."""
+    if not enabled():
+        return contextlib.nullcontext()
+    return jax.named_scope(name)
+
+
+def span(name: str):
+    """Host wall-clock span + device scope; nullcontext when disabled."""
+    if not enabled():
+        return contextlib.nullcontext()
+    stack = contextlib.ExitStack()
+    stack.enter_context(jax.profiler.TraceAnnotation(name))
+    stack.enter_context(jax.named_scope(name))
+    return stack
+
+
+def traced(name: str):
+    """Decorator form of ``span`` (host-driven functions)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with span(name):
+                return fn(*args, **kwargs)
+
+        return wrapper
+
+    return deco
+
+
+@contextlib.contextmanager
+def capture(logdir: str):
+    """Dump an xprof/perfetto trace of the enclosed region to ``logdir``
+    (view with xprof / tensorboard-profile / perfetto).  Unconditional —
+    asking for a trace dump *is* the opt-in, no ``REPRO_TRACE`` needed."""
+    jax.profiler.start_trace(logdir)
+    try:
+        yield logdir
+    finally:
+        jax.profiler.stop_trace()
+
+
+def trace_run(fn, *args, logdir: str, **kwargs):
+    """Run ``fn(*args, **kwargs)`` under ``capture`` and block until its
+    results land, so the dump covers the real device work — the one-call
+    helper for profiling a jitted read/update on hardware."""
+    with capture(logdir):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    return out

@@ -15,6 +15,7 @@ Finished sequences free their pages (ΔTree delete → Merge compaction).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,8 @@ from repro.models.layers.basic import (
 from repro.models.layers.moe import moe_apply
 from repro.kernels.delta_paged_attention import paged_decode_attention
 from repro.api import Index
+from repro.obs import trace as OT
+from repro.obs.stats import ServeStats
 from repro.serving.pager import DeltaPager, PagerConfig, make_pager
 
 
@@ -68,6 +71,7 @@ class ServeEngine:
         self.lengths: dict[int, int] = {}
         self._next_id = 0
         self._steps = 0   # decode steps taken (drives the background flush)
+        self.obs = ServeStats.zero()   # decode-latency reservoir + flush log
 
     # ------------------------------------------------------------- submit ---
 
@@ -118,11 +122,25 @@ class ServeEngine:
     # --------------------------------------------------------------- step ---
 
     def step(self) -> dict[int, int]:
-        """One decode step for all active sequences; returns {seq: token}."""
+        """One decode step for all active sequences; returns {seq: token}.
+
+        Every non-empty step records one sample into ``self.obs`` (the
+        decode-latency reservoir + flush log + pending high-water) — the
+        serve benchmark's p50/p99 come straight from it."""
+        t0 = time.perf_counter()
+        with OT.span("serve.step"):
+            out, flushed = self._step()
+        if out:
+            self.obs = self.obs.record(time.perf_counter() - t0,
+                                       pending=self.pager.pending,
+                                       flushed=flushed)
+        return out
+
+    def _step(self):
         cfg = self.cfg
         sids = [s for s, r in self.active.items() if not r.done][: self.max_batch]
         if not sids:
-            return {}
+            return {}, False
         # grow pages where the next token crosses a page boundary
         for sid in sids:
             if self.lengths[sid] % self.ps == 0 and self.lengths[sid] > 0:
@@ -149,7 +167,8 @@ class ServeEngine:
         # (allocate/free) only append/mark and the structural work drains
         # here, amortized across decode steps instead of blocking a batch
         fe = getattr(self.pager.cfg, "flush_every", 0)
-        if fe and self._steps % fe == 0:
+        flushed = bool(fe and self._steps % fe == 0)
+        if flushed:
             self.pager.flush()
         out = {}
         for bi, sid in enumerate(sids):
@@ -160,7 +179,7 @@ class ServeEngine:
             if len(req.out) >= req.max_new:
                 req.done = True
                 self.finish(sid)
-        return out
+        return out, flushed
 
     def finish(self, sid: int):
         self.pager.free_seq(sid)

@@ -33,6 +33,7 @@ import numpy as np
 from repro.api import Index, OpBatch, make_index
 from repro.api.opbatch import OP_DELETE, OP_INSERT
 from repro.core.deltatree import TreeConfig
+from repro.obs import trace as TR
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +90,7 @@ class DeltaPager:
             f"{self.index.capability}")
         self.free_pages = list(range(cfg.num_pages - 1, -1, -1))
         self.seq_blocks: dict[int, int] = {}   # seq -> allocated blocks
+        self.pending = 0   # buffered items awaiting maintenance (I5' carry)
         self.stats = {"searches": 0, "inserts": 0, "deletes": 0, "hops": 0,
                       "flushes": 0, "maint_rebuilds": 0, "maint_expands": 0,
                       "maint_merges": 0}
@@ -100,14 +102,18 @@ class DeltaPager:
 
     # ---- index protocol ----
     def _lookup(self, keys: np.ndarray):
-        """(found, payload, hops) for a key batch (wait-free lookup)."""
-        return self.index.lookup(jnp.asarray(keys))
+        """(found, payload, hops) for a key batch (wait-free lookup).
+        Tolerates a stats-collecting index (trailing ReadStats dropped)."""
+        out = self.index.lookup(jnp.asarray(keys))
+        return out[0], out[1], out[2]
 
     def _update(self, kinds: np.ndarray, keys: np.ndarray,
                 payloads: np.ndarray):
         """Apply a batched insert/delete step; returns per-op results."""
-        self.index, res = self.index.insert_delete(
+        self.index, res, mstats = self.index.update(
             OpBatch.mixed(kinds, keys, payloads))
+        if mstats is not None:
+            self.pending = int(mstats.pending)
         assert not self.index.alloc_failed(), "pager index arena exhausted"
         return res
 
@@ -147,6 +153,7 @@ class DeltaPager:
         Returns the MaintenanceStats (or None)."""
         self.index, mstats = self.index.flush()
         if mstats is not None:
+            self.pending = int(mstats.pending)
             self.stats["flushes"] += 1
             self.stats["maint_rebuilds"] += int(mstats.rebuilds)
             self.stats["maint_expands"] += int(mstats.expands)
@@ -162,7 +169,8 @@ class DeltaPager:
             np.repeat(seq_ids, max_blocks),
             np.tile(np.arange(max_blocks), b),
         )
-        found, pages, hops = self._lookup(keys)
+        with TR.span("pager.block_tables"):
+            found, pages, hops = self._lookup(keys)
         self.stats["searches"] += len(keys)
         self.stats["hops"] += int(np.asarray(hops).sum())
         table = np.where(np.asarray(found), np.asarray(pages), -1)

@@ -19,6 +19,8 @@ PACKAGES = [
     "repro.data",
     "repro.distributed",
     "repro.kernels",
+    "repro.maintenance",
+    "repro.obs",
     "repro.optim",
     "repro.parallel",
     "repro.serving",

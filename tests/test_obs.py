@@ -1,0 +1,404 @@
+"""repro.obs — counter pytrees, trace spans, report CLI (DESIGN.md §9).
+
+The two contracts everything else leans on:
+
+- ``collect_stats=False`` is *free*: the dispatched read lowers to HLO
+  byte-identical to the bare engine-hook composition (the pre-obs graph).
+- ``collect_stats=True`` stats are engine-invariant: derived from the
+  (found, hops) columns the conformance suite already pins bit-identical,
+  so the hop histogram must match bit for bit across scalar/lockstep and
+  across the forest's fused/vmap dispatches.
+"""
+
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import make_index
+from repro.core import deltatree as DT
+from repro.core import engine as E
+from repro.core import layout
+from repro.core.deltatree import TreeConfig
+from repro.distributed import forest as D
+from repro.distributed.forest import ForestConfig
+from repro.obs import report, trace
+from repro.obs.stats import (
+    HOP_BINS,
+    LATENCY_RESERVOIR,
+    MaintenanceStats,
+    ReadStats,
+    RouterStats,
+    SearchStats,
+    ServeStats,
+)
+
+KEYS = np.arange(10, 400, 7, dtype=np.int64)
+CFG = TreeConfig(height=4, max_dnodes=256, buf_cap=8, collect_stats=True)
+
+
+def _queries():
+    """Hits, misses, and born-resolved ROUTE_LEFT sentinel lanes."""
+    return jnp.asarray(
+        list(KEYS[:6]) + [5, 11, 401, layout.ROUTE_LEFT, layout.ROUTE_LEFT],
+        jnp.int32)
+
+
+# --------------------------------------------------------------- pytrees ---
+
+
+def test_stats_jit_roundtrip():
+    s = SearchStats.of(jnp.asarray([0, 1, 2, 2], jnp.int32),
+                       jnp.zeros(4, bool), jnp.zeros(4, bool))
+    r = RouterStats.of(jnp.asarray([3, 1], jnp.int32), 0)
+    v = ServeStats.zero()
+
+    s2 = jax.jit(lambda x: x.merge(x))(s)
+    assert int(s2.queries) == 8 and int(s2.rounds) == 2
+    r2 = jax.jit(lambda x: x.merge(x))(r)
+    assert np.asarray(r2.lanes).tolist() == [6, 2]
+    v2 = jax.jit(lambda x: x.record(1e-3, pending=3, flushed=True))(v)
+    assert int(v2.steps) == 1 and int(v2.pending_hwm) == 3
+    # ReadStats with router=None flattens to nothing on that leaf
+    rs = ReadStats(search=s)
+    rs2 = jax.jit(lambda x: x)(rs)
+    assert rs2.router is None and int(rs2.search.queries) == 4
+
+
+def test_reduce_semantics_max_rounds_sum_work():
+    """reduce over stacked (S,) legs: rounds-like max, work-like sum."""
+    a = SearchStats.of(jnp.asarray([1, 1], jnp.int32),
+                       jnp.zeros(2, bool), jnp.zeros(2, bool))
+    b = SearchStats.of(jnp.asarray([3, 2], jnp.int32),
+                       jnp.zeros(2, bool), jnp.ones(2, bool))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), a, b)
+    red = SearchStats.reduce(stacked)
+    assert int(red.rounds) == 3 and int(red.hops_max) == 3   # critical path
+    assert int(red.queries) == 4 and int(red.hops_sum) == 7  # work sums
+    assert int(red.buffer_hits) == 2
+    assert np.asarray(red.hops_hist).sum() == 4
+
+    ma = MaintenanceStats(rounds=jnp.int32(2), rebuilds=jnp.int32(1),
+                          expands=jnp.int32(0), merges=jnp.int32(3),
+                          pending=jnp.int32(4))
+    mb = MaintenanceStats(rounds=jnp.int32(5), rebuilds=jnp.int32(2),
+                          expands=jnp.int32(1), merges=jnp.int32(0),
+                          pending=jnp.int32(1))
+    mred = MaintenanceStats.reduce(
+        jax.tree.map(lambda *xs: jnp.stack(xs), ma, mb))
+    assert int(mred.rounds) == 5          # max: shards run concurrently
+    assert int(mred.rebuilds) == 3 and int(mred.pending) == 5  # sums
+
+
+def test_serve_stats_ring_and_percentiles():
+    s = ServeStats.zero()
+    n = LATENCY_RESERVOIR + 40   # wrap the ring
+    for i in range(n):
+        s = s.record((i + 1) * 1e-6, pending=i % 7, flushed=(i % 10 == 0))
+    assert int(s.steps) == n
+    lat = s.valid_latencies()
+    assert lat.size == LATENCY_RESERVOIR
+    p = s.percentiles()
+    assert 0 < p["p50_us"] <= p["p99_us"]
+    d = s.asdict()
+    assert d["flushes"] == (n + 9) // 10 and d["pending_hwm"] == 6
+
+
+def test_maintenance_stats_rehomed():
+    import repro.maintenance
+    import repro.maintenance.stats
+    import repro.obs.stats
+
+    assert repro.maintenance.MaintenanceStats is MaintenanceStats
+    assert repro.maintenance.stats.MaintenanceStats is \
+        repro.obs.stats.MaintenanceStats
+
+
+# ------------------------------------------------------ engine dispatch ---
+
+
+@pytest.mark.parametrize("engine", ["scalar", "lockstep"])
+def test_tree_read_stats(engine):
+    import dataclasses
+
+    cfg = dataclasses.replace(CFG, engine=engine)
+    t = DT.bulk_build(cfg, KEYS)
+    q = _queries()
+    found, hops, stats = DT.search_jit(cfg, t, q)
+    assert isinstance(stats, ReadStats) and stats.router is None
+    s = stats.search
+    assert int(s.queries) == q.shape[0]
+    assert int(s.pad_lanes) == 2               # the two sentinel lanes
+    assert int(s.hops_sum) == int(jnp.sum(hops))
+    assert int(s.rounds) == int(jnp.max(hops)) == int(s.hops_max)
+    ref_hist = np.bincount(np.clip(np.asarray(hops), 0, HOP_BINS - 1),
+                           minlength=HOP_BINS)
+    assert np.array_equal(np.asarray(s.hops_hist), ref_hist)
+    # occupancy[r] = lanes active entering round r
+    occ = np.asarray(s.occupancy)
+    hnp = np.asarray(hops)
+    assert all(occ[r] == int((hnp > r).sum()) for r in range(occ.size))
+
+
+def test_hop_histogram_parity_across_engines():
+    import dataclasses
+
+    q = _queries()
+    outs = {}
+    for engine in ("scalar", "lockstep"):
+        cfg = dataclasses.replace(CFG, engine=engine)
+        t = DT.bulk_build(cfg, KEYS)
+        outs[engine] = DT.search_jit(cfg, t, q)
+    fs, hs, ss = outs["scalar"]
+    fl, hl, sl = outs["lockstep"]
+    assert np.array_equal(np.asarray(fs), np.asarray(fl))
+    assert np.array_equal(np.asarray(hs), np.asarray(hl))
+    for a, b in zip(jax.tree.leaves(ss), jax.tree.leaves(sl)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_buffer_hits_under_deferred_maintenance():
+    import dataclasses
+
+    cfg = dataclasses.replace(CFG, maintenance="deferred")
+    t = DT.bulk_build(cfg, KEYS)
+    # dense run between existing keys: overflows a leaf, so deferred
+    # maintenance parks the spill in overflow buffers (I5' state)
+    fresh = jnp.asarray([k for k in range(11, 30) if k not in set(KEYS)],
+                        jnp.int32)
+    t, res, _ = DT.update_batch(
+        cfg, t, jnp.full(fresh.shape, DT.OP_INSERT, jnp.int32), fresh)
+    assert bool(np.asarray(res).all())
+    assert int(jnp.sum(t.bcount)) > 0   # deferred: items sit in buffers
+    q = jnp.concatenate([fresh, jnp.asarray(KEYS[:4], jnp.int32)])
+    found, hops, stats = DT.search_jit(cfg, t, q)
+    assert bool(np.asarray(found).all())
+    member = np.asarray(DT.buffered_member(cfg, t, q))
+    expected = int((np.asarray(found) & member).sum())
+    assert expected > 0                 # the leg is non-trivial
+    assert int(stats.search.buffer_hits) == expected
+
+
+def test_collect_stats_false_hlo_identical(monkeypatch):
+    """The static gate's whole contract: the disabled dispatch lowers
+    byte-identically to the bare engine-hook composition (= the pre-obs
+    read path), and the enabled one doesn't."""
+    monkeypatch.delenv(trace.ENV, raising=False)  # spans would rename scopes
+    cfg = TreeConfig(height=4, max_dnodes=64, buf_cap=8)
+    t = DT.bulk_build(cfg, KEYS[:20])
+    q = jnp.asarray(KEYS[:8], jnp.int32)
+
+    def dispatched(t, q):
+        return E.search(cfg, t, q)
+
+    def bare(t, q):
+        found, _, hops = E.get_engine(cfg.engine).lookup(cfg, t, q)
+        return found, hops
+
+    def norm(txt):
+        return re.sub(r"jit_\w+", "jit_fn", txt)
+
+    lo_d = norm(jax.jit(dispatched).lower(t, q).as_text())
+    lo_b = norm(jax.jit(bare).lower(t, q).as_text())
+    assert lo_d == lo_b
+
+    import dataclasses
+
+    cfg_on = dataclasses.replace(cfg, collect_stats=True)
+    lo_on = norm(jax.jit(lambda t, q: E.search(cfg_on, t, q))
+                 .lower(t, q).as_text())
+    assert lo_on != lo_b
+
+
+def test_index_handle_collect_stats():
+    ix = make_index("deltatree", initial=KEYS, height=4, max_dnodes=256,
+                    buf_cap=8, collect_stats=True)
+    assert ix.collect_stats
+    found, hops, stats = ix.search(_queries())
+    assert int(stats.search.queries) == int(_queries().shape[0])
+    off = make_index("deltatree", initial=KEYS, height=4, max_dnodes=256,
+                    buf_cap=8)
+    assert not off.collect_stats
+    assert len(off.search(_queries())) == 2
+    assert not make_index("sorted_array", initial=KEYS).collect_stats
+
+
+# ---------------------------------------------------------------- forest ---
+
+
+def _fcfg(engine="scalar", fused=True):
+    import dataclasses
+
+    return ForestConfig(
+        num_shards=4,
+        tree=dataclasses.replace(CFG, engine=engine),
+        fused=fused)
+
+
+def test_forest_read_stats_router_leg():
+    fcfg = _fcfg()
+    f = D.bulk_build(fcfg, KEYS)
+    q = _queries()
+    found, hops, stats = D.search_batch(fcfg, f, q)
+    r = stats.router
+    assert r is not None
+    assert int(np.asarray(r.lanes).sum()) == int(q.shape[0])
+    assert int(r.batches) == 1
+    assert r.skew() >= 1.0
+    # ROUTE_LEFT inputs are already at the clamp target -> clamped counts
+    # only keys the router *rewrote*; probe one true out-of-domain key
+    _, _, st2 = D.search_batch(fcfg, f, jnp.asarray([-5, 7], jnp.int32))
+    assert int(st2.router.clamped) == 1
+
+
+@pytest.mark.parametrize("engine", ["scalar", "lockstep"])
+def test_forest_stats_dispatch_parity(engine):
+    """fused and vmap dispatches must produce bit-identical ReadStats."""
+    q = _queries()
+    outs = []
+    for fused in (True, False):
+        fcfg = _fcfg(engine, fused)
+        f = D.bulk_build(fcfg, KEYS)
+        outs.append(D.search_batch(fcfg, f, q))
+    (fa, ha, sa), (fb, hb, sb) = outs
+    assert np.array_equal(np.asarray(fa), np.asarray(fb))
+    assert np.array_equal(np.asarray(ha), np.asarray(hb))
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forest_load_counters_accumulate_and_survive_flush():
+    import dataclasses
+
+    fcfg = dataclasses.replace(
+        _fcfg(), tree=dataclasses.replace(CFG, maintenance="deferred"))
+    f = D.bulk_build(fcfg, KEYS)
+    assert D.shard_load(f) == {"reads": [0] * 4, "updates": [0] * 4}
+    q = jnp.asarray(KEYS[:12], jnp.int32)
+    f = D.record_reads(fcfg, f, q)
+    f = D.record_reads(fcfg, f, q)
+    load = D.shard_load(f)
+    assert sum(load["reads"]) == 24 and sum(load["updates"]) == 0
+    kinds = jnp.asarray([DT.OP_INSERT, DT.OP_SEARCH, DT.OP_INSERT,
+                         DT.OP_DELETE], jnp.int32)
+    keys = jnp.asarray([13, 17, 20, int(KEYS[3])], jnp.int32)
+    f, _, _ = D.update_batch(fcfg, f, kinds, keys)
+    load = D.shard_load(f)
+    assert sum(load["updates"]) == 3      # OP_SEARCH rows don't count
+    f, _ = D.flush(fcfg, f)
+    assert D.shard_load(f) == load        # flush preserves the counters
+
+
+def test_forest_stats_8dev_shard_map():
+    """Stats survive a real multi-device shard_map dispatch: lanes sum to
+    K and the fused/vmap parity holds under 8 fake devices."""
+    from tests._subproc import run_py
+
+    out = run_py("""
+import dataclasses, numpy as np, jax, jax.numpy as jnp
+from repro.core.deltatree import TreeConfig
+from repro.distributed import forest as D
+from repro.distributed.forest import ForestConfig
+keys = np.arange(10, 400, 7, dtype=np.int64)
+cfg = TreeConfig(height=4, max_dnodes=256, buf_cap=8, collect_stats=True,
+                 engine="lockstep")
+q = jnp.asarray(list(keys[:6]) + [5, 11, 401], jnp.int32)
+outs = []
+for fused in (True, False):
+    fcfg = ForestConfig(num_shards=8, tree=cfg, fused=fused)
+    f = D.bulk_build(fcfg, keys)
+    outs.append(D.search_batch(fcfg, f, q))
+(fa, ha, sa), (fb, hb, sb) = outs
+assert np.array_equal(np.asarray(ha), np.asarray(hb))
+for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+print("lanes", int(np.asarray(sa.router.lanes).sum()), "of", q.shape[0])
+""", devices=8)
+    assert "lanes 9 of 9" in out
+
+
+# ----------------------------------------------------------------- trace ---
+
+
+def test_trace_gating(monkeypatch):
+    import contextlib
+
+    monkeypatch.delenv(trace.ENV, raising=False)
+    assert not trace.enabled()
+    assert isinstance(trace.annotate("x"), contextlib.nullcontext)
+    assert isinstance(trace.span("x"), contextlib.nullcontext)
+    monkeypatch.setenv(trace.ENV, "1")
+    assert trace.enabled()
+    with trace.span("obs-test"), trace.annotate("obs-test-inner"):
+        assert int(jnp.int32(1) + 1) == 2
+    monkeypatch.setenv(trace.ENV, "0")
+    assert not trace.enabled()
+
+
+def test_trace_capture_smoke(tmp_path):
+    try:
+        out = trace.trace_run(
+            lambda x: jnp.sum(x * 2), jnp.arange(8), logdir=str(tmp_path))
+    except Exception as e:                      # pragma: no cover
+        pytest.skip(f"profiler unavailable here: {e}")
+    assert int(out) == 56
+    assert any(tmp_path.rglob("*"))             # something was dumped
+
+
+# ---------------------------------------------------------------- report ---
+
+
+def _bench(ops, ts="t0", extra=None):
+    rows = []
+    for backend, v in ops.items():
+        r = {"suite": "fig11", "bench": "b", "backend": backend,
+             "engine": "scalar", "update_pct": 10, "batch": 256,
+             "seed": 0, "ops_per_s": v}
+        r.update(extra or {})
+        rows.append(r)
+    return {"timestamp": ts, "args": {"smoke": True}, "rows": rows}
+
+
+def test_report_render_and_diff(tmp_path, capsys):
+    new = _bench({"deltatree": 850.0, "sorted_array": 3000.0}, "t1",
+                 extra={"dispatch": None})  # newer schema: extra ID key
+    base = _bench({"deltatree": 1000.0, "sorted_array": 1000.0}, "t0")
+    pn, pb = tmp_path / "new.json", tmp_path / "base.json"
+    pn.write_text(json.dumps(new))
+    pb.write_text(json.dumps(base))
+
+    rc = report.main([str(pn)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "## fig11 (2 rows)" in out and "deltatree" in out
+
+    out_md = tmp_path / "report.md"
+    rc = report.main([str(pn), "--diff", str(pb), "--out", str(out_md)])
+    assert rc == 0   # regressions flagged but not failing by default
+    text = out_md.read_text()
+    assert "2 matched" in text
+    assert "0.850x  << REGRESSION" in text   # deltatree slipped to 0.85x
+    assert "3.000x" in text                  # sorted_array sped up
+
+    rc = report.main([str(pn), "--diff", str(pb), "--threshold", "0.95",
+                      "--fail-on-regression"])
+    assert rc == 1
+    rc = report.main([str(pn), "--diff", str(pb), "--threshold", "0.5",
+                      "--fail-on-regression"])
+    assert rc == 0
+
+
+def test_report_tolerant_matching(tmp_path):
+    """A key missing on either side is a wildcard; ambiguity unmatches."""
+    new = _bench({"deltatree": 500.0}, extra={"flush_every": 0})
+    base = _bench({"deltatree": 1000.0})
+    lines, regs = report.diff(new, base)
+    assert len(regs) == 1
+    # two identical base rows for the same identity -> ambiguous -> skip
+    base2 = {"timestamp": "t", "args": {},
+             "rows": base["rows"] + [dict(base["rows"][0])]}
+    lines, regs = report.diff(new, base2)
+    assert regs == [] and any("1 unmatched" in ln for ln in lines)

@@ -84,8 +84,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="fig11|fig12|table1|ub_sweep|serve|forest|engines"
-                         "|maint")
+                    help="fig11|fig12|table1|ub_sweep|serve|serve_trace"
+                         "|forest|engines|maint")
     ap.add_argument("--maintenance", default=None,
                     help="maint suite: run only this policy")
     ap.add_argument("--trace-dir", default=None,
@@ -103,8 +103,8 @@ def main() -> None:
     from benchmarks import ub_sweep
 
     todo = args.only.split(",") if args.only else [
-        "table1", "ub_sweep", "fig11", "fig12", "serve", "forest",
-        "engines", "maint"]
+        "table1", "ub_sweep", "fig11", "fig12", "serve", "serve_trace",
+        "forest", "engines", "maint"]
     rows: list = []
 
     def add(suite, got):
@@ -140,6 +140,10 @@ def main() -> None:
         if "serve" in todo:
             add("serve", _in_x64_subprocess("benchmarks.serve_paged", quick,
                                             seed, backend, engine, smoke))
+        if "serve_trace" in todo:
+            add("serve_trace", _in_x64_subprocess("benchmarks.serve_trace",
+                                                  quick, seed, backend,
+                                                  engine, smoke))
         if "forest" in todo:
             add("forest", forest_scale.main(quick=quick, seed=seed,
                                             engine=engine, smoke=smoke))

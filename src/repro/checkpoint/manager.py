@@ -1,5 +1,5 @@
 """Sharded checkpointing with atomic commit, async save, and resharding
-restore (the elastic-scaling path; DESIGN.md §11).
+restore (the elastic-scaling path; DESIGN.md §12).
 
 Format: one .npy per pytree leaf (path-encoded filename) + manifest.json
 (step, tree structure, shapes/dtypes, mesh shape, data cursor).  Commit is

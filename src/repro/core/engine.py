@@ -62,13 +62,23 @@ class ForestBatch:
     kernel launch per frontier round serves all co-resident shards — no
     dense (S, K) scatter, no vmap over shards.
 
-    lookup:    (cfg, trees, lid[K], keys[K]) -> (found, payload, hops)
-    successor: (cfg, trees, lid[K], keys[K])
+    lookup:    (cfg, trees, lid[K], keys[K], *, view=None)
+               -> (found, payload, hops)
+    successor: (cfg, trees, lid[K], keys[K], *, view=None)
                -> (found[K], succ[K], has_min[S_loc], mins[S_loc])
                — the per-shard minimum probes (successor of KEY_MIN-1,
                one per local shard) ride the same chase as S_loc extra
                lanes; the forest's cross-shard suffix-min combine
                consumes them.
+    make_view: optional (cfg, trees) -> view — precompute the fused
+               base-offset view the hooks would otherwise build inline.
+               A caller holding an unchanged arena across many reads
+               (the serve decode loop) builds it once and passes it back
+               through the hooks' ``view=`` keyword; ``None`` (and a
+               ``view=None`` call) mean build-per-call, the original
+               semantics.  The view is pure data derived from ``trees``
+               — passing a stale one is the caller's bug, which is why
+               the forest layer keys its cache on the update epoch.
 
     Results must be bit-identical to the dense per-shard vmap dispatch
     (found/payload/succ and per-query hops) — the fused-conformance suite
@@ -77,6 +87,7 @@ class ForestBatch:
 
     lookup: Callable[..., Any]
     successor: Callable[..., Any]
+    make_view: Callable[..., Any] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -382,9 +393,9 @@ def _fused_trees_view(cfg, trees):
     return view, roots
 
 
-def _fused_lockstep_lookup(cfg, trees, lid, keys: jax.Array):
+def _fused_lockstep_lookup(cfg, trees, lid, keys: jax.Array, *, view=None):
     keys = jnp.asarray(keys, jnp.int32)
-    view, roots = _fused_trees_view(cfg, trees)
+    view, roots = _fused_trees_view(cfg, trees) if view is None else view
     lv, lb, dn, hops, _ = _lockstep_walk(cfg, view, _walk_queries(cfg, keys),
                                          roots[lid])
     found, payload = DT.searchnode(cfg, view, keys, lv, lb, dn)
@@ -414,7 +425,7 @@ def _fused_fold_buffered(cfg, trees, lid, keys, found, succ):
 
 
 def _fused_lockstep_successor(cfg, trees, lid, keys: jax.Array,
-                              max_chase: int = 8):
+                              max_chase: int = 8, *, view=None):
     """Fused successor: K query lanes plus one shard-minimum probe lane
     per co-resident shard (successor of KEY_MIN-1 seeded at that shard's
     root — replacing the vmap path's per-shard appended lane) share one
@@ -422,7 +433,7 @@ def _fused_lockstep_successor(cfg, trees, lid, keys: jax.Array,
     keys = jnp.asarray(keys, jnp.int32)
     k = keys.shape[0]
     s_loc = trees.value.shape[0]
-    view, roots = _fused_trees_view(cfg, trees)
+    view, roots = _fused_trees_view(cfg, trees) if view is None else view
     qk = jnp.concatenate(
         [keys, jnp.full((s_loc,), layout.KEY_MIN - 1, jnp.int32)])
     lid_all = jnp.concatenate(
@@ -440,5 +451,6 @@ register_engine(SearchEngine(
     forest_batch=ForestBatch(
         lookup=_fused_lockstep_lookup,
         successor=_fused_lockstep_successor,
+        make_view=_fused_trees_view,
     ),
 ))

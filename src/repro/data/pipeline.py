@@ -1,6 +1,6 @@
 """Deterministic-by-step sharded data pipeline.
 
-Design for fault tolerance / straggler mitigation (DESIGN.md §11):
+Design for fault tolerance / straggler mitigation (DESIGN.md §12):
 - `batch_at_step(cfg, step)` is a pure function of (seed, step) — any host
   can (re)materialize any step's global batch, so there is no shuffle state
   to checkpoint beyond the step counter, restarts are bit-exact, and a

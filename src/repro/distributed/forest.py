@@ -36,6 +36,7 @@ and combined with a suffix-min outside the shard_map — no second hop.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import NamedTuple
@@ -89,12 +90,20 @@ class Forest(NamedTuple):
     ``reads``/``updates`` are cumulative per-shard (S,) op counters (the
     obs subsystem's skew view — `shard_load`).  Updates auto-count inside
     `update_batch`; reads are pure, so read batches only accumulate when
-    the caller opts in via the `record_reads` state transition."""
+    the caller opts in via the `record_reads` state transition.
+
+    ``epoch`` is the arena-mutation counter: bumped by every
+    `update_batch`/`flush` (the only transitions that touch arena
+    contents), preserved by pure-counter transitions (`record_reads`).
+    It keys the host-side fused-view cache — a read on an unchanged
+    epoch reuses the cached `fuse_arenas` base-offset view instead of
+    rebuilding it per call."""
 
     trees: DeltaTree
     splits: jax.Array
     reads: jax.Array      # (S,) int32 — ops recorded via `record_reads`
     updates: jax.Array    # (S,) int32 — non-search rows seen by `update_batch`
+    epoch: jax.Array      # () int32 — arena-mutation counter (view cache key)
 
 
 def _stack(trees: list[DeltaTree]) -> DeltaTree:
@@ -127,7 +136,8 @@ def _zero_counters(fcfg: ForestConfig) -> jax.Array:
 def empty(fcfg: ForestConfig, splits=None) -> Forest:
     trees = _stack([DT.empty(fcfg.tree) for _ in range(fcfg.num_shards)])
     return Forest(trees=trees, splits=_as_splits(fcfg, splits),
-                  reads=_zero_counters(fcfg), updates=_zero_counters(fcfg))
+                  reads=_zero_counters(fcfg), updates=_zero_counters(fcfg),
+                  epoch=jnp.int32(0))
 
 
 def bulk_build(fcfg: ForestConfig, values: np.ndarray,
@@ -154,7 +164,8 @@ def bulk_build(fcfg: ForestConfig, values: np.ndarray,
             fcfg.tree, values[mask],
             payloads[mask] if payloads is not None else None))
     return Forest(trees=_stack(trees), splits=_as_splits(fcfg, splits),
-                  reads=_zero_counters(fcfg), updates=_zero_counters(fcfg))
+                  reads=_zero_counters(fcfg), updates=_zero_counters(fcfg),
+                  epoch=jnp.int32(0))
 
 
 # --------------------------------------------------------------------------
@@ -186,11 +197,88 @@ def _fused(fcfg: ForestConfig):
     return E.forest_batch(fcfg.tree) if fcfg.fused else None
 
 
+# ---- fused-view hoisting (ROADMAP fold-in; serve decode loops) -----------
+#
+# The fused dispatch's base-offset arena view (`ForestBatch.make_view` →
+# `kernels.veb_search.fuse_arenas`) is pure data derived from the arenas:
+# read-heavy loops over an unchanged forest were rebuilding it on every
+# call.  The public read wrappers below look it up in a small host-side
+# LRU keyed on ``(fcfg, epoch)`` — epoch bumps on every arena mutation,
+# and a paranoid identity check on the trees pytree catches two distinct
+# forests that happen to share an epoch — then hand it to the jitted read
+# core as a regular pytree argument.  Inside someone else's trace the
+# epoch is a Tracer (unreadable host-side), so the wrapper passes
+# ``view=None`` and the hooks build inline — exactly the old graph.
+
+_VIEW_CACHE_CAP = 4  # distinct (fcfg, forest) streams kept warm at once
+_VIEW_CACHE: collections.OrderedDict = collections.OrderedDict()
+_VIEW_STATS = {"builds": 0, "hits": 0}
+
+
 @functools.partial(jax.jit, static_argnums=0)
+def _build_view(fcfg: ForestConfig, trees):
+    fb = _fused(fcfg)
+    return R.build_fused_view(fcfg.num_shards,
+                              functools.partial(fb.make_view, fcfg.tree),
+                              trees)
+
+
+def _maybe_cached_view(fcfg: ForestConfig, f: Forest):
+    """The cached fused view for ``f`` (building + caching on miss), or
+    None when hoisting does not apply: fused dispatch off / engine has no
+    ``make_view`` / we are inside a trace (epoch unreadable)."""
+    fb = _fused(fcfg)
+    if fb is None or fb.make_view is None:
+        return None
+    if isinstance(f.epoch, jax.core.Tracer):
+        return None
+    key = (fcfg, int(f.epoch))
+    ent = _VIEW_CACHE.get(key)
+    if ent is not None and ent[0] is f.trees:
+        _VIEW_STATS["hits"] += 1
+        _VIEW_CACHE.move_to_end(key)
+        return ent[1]
+    view = _build_view(fcfg, f.trees)
+    _VIEW_STATS["builds"] += 1
+    # one live view per fcfg: a rebuild means the arena moved on (update /
+    # different forest), so the old epoch's view is dead weight — arena-
+    # sized, worth dropping eagerly rather than waiting out the LRU
+    for stale in [k for k in _VIEW_CACHE if k[0] == fcfg]:
+        del _VIEW_CACHE[stale]
+    _VIEW_CACHE[key] = (f.trees, view)
+    while len(_VIEW_CACHE) > _VIEW_CACHE_CAP:
+        _VIEW_CACHE.popitem(last=False)
+    return view
+
+
+def fused_view_cache_stats() -> dict:
+    """Host-side cache counters (obs / regression tests): cumulative
+    builds + hits since process start or the last reset, current size."""
+    return {"builds": _VIEW_STATS["builds"], "hits": _VIEW_STATS["hits"],
+            "size": len(_VIEW_CACHE)}
+
+
+def reset_fused_view_cache() -> None:
+    _VIEW_CACHE.clear()
+    _VIEW_STATS["builds"] = 0
+    _VIEW_STATS["hits"] = 0
+
+
 def search_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
     """Routed wait-free search. Returns (found[K], hops[K]) — plus a
     trailing `ReadStats` when ``fcfg.tree.collect_stats`` is on."""
-    out = _lookup(fcfg, f, keys)
+    return _search_core(fcfg, f, keys, _maybe_cached_view(fcfg, f))
+
+
+def lookup_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
+    """Routed map-mode lookup. Returns (found[K], payload[K], hops[K]) —
+    plus a trailing `ReadStats` when ``fcfg.tree.collect_stats`` is on."""
+    return _lookup_core(fcfg, f, keys, _maybe_cached_view(fcfg, f))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _search_core(fcfg: ForestConfig, f: Forest, keys: jax.Array, view):
+    out = _lookup(fcfg, f, keys, view)
     if E.collecting(fcfg.tree):
         found, _, hops, stats = out
         return found, hops, stats
@@ -199,10 +287,8 @@ def search_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def lookup_batch(fcfg: ForestConfig, f: Forest, keys: jax.Array):
-    """Routed map-mode lookup. Returns (found[K], payload[K], hops[K]) —
-    plus a trailing `ReadStats` when ``fcfg.tree.collect_stats`` is on."""
-    return _lookup(fcfg, f, keys)
+def _lookup_core(fcfg: ForestConfig, f: Forest, keys: jax.Array, view):
+    return _lookup(fcfg, f, keys, view)
 
 
 def _forest_read_stats(fcfg: ForestConfig, f: Forest, raw, keys, sid,
@@ -227,7 +313,7 @@ def _forest_read_stats(fcfg: ForestConfig, f: Forest, raw, keys, sid,
     )
 
 
-def _lookup(fcfg: ForestConfig, f: Forest, keys: jax.Array):
+def _lookup(fcfg: ForestConfig, f: Forest, keys: jax.Array, view=None):
     raw = jnp.asarray(keys)
     keys = _route_keys(raw)
     fb = _fused(fcfg)
@@ -236,11 +322,12 @@ def _lookup(fcfg: ForestConfig, f: Forest, keys: jax.Array):
         # round across all co-resident shards (no (S, K) dense scatter)
         sid = R.shard_ids(f.splits, keys)
 
-        def per_device(trees_loc, lid, ks):
-            return fb.lookup(fcfg.tree, trees_loc, lid, ks), None
+        def per_device(trees_loc, lid, ks, view_loc):
+            return fb.lookup(fcfg.tree, trees_loc, lid, ks,
+                             view=view_loc), None
 
         r, lane, _ = R.fused_dispatch(fcfg.num_shards, per_device,
-                                      f.trees, sid, keys)
+                                      f.trees, sid, keys, view=view)
         found, pay, hops = R.gather_fused(r, lane)
     else:
         r = R.route(f.splits, keys)
@@ -277,24 +364,28 @@ def _succ_combine(sid, f_owner, s_owner, has_min, mins):
     return out_found, out_succ
 
 
-@functools.partial(jax.jit, static_argnums=0)
 def successor_jit(fcfg: ForestConfig, f: Forest, keys: jax.Array):
     """Routed wait-free successor. Returns (found[K], succ[K]).
 
     Owner-shard miss falls through to the first later non-empty shard's
     minimum (computed in the same dispatch; combined with a suffix-min)."""
+    return _successor_core(fcfg, f, keys, _maybe_cached_view(fcfg, f))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _successor_core(fcfg: ForestConfig, f: Forest, keys: jax.Array, view):
     keys = _route_keys(keys)
     fb = _fused(fcfg)
     if fb is not None:
         sid = R.shard_ids(f.splits, keys)
 
-        def per_device(trees_loc, lid, ks):
+        def per_device(trees_loc, lid, ks, view_loc):
             found, succ, has_min, mins = fb.successor(
-                fcfg.tree, trees_loc, lid, ks)
+                fcfg.tree, trees_loc, lid, ks, view=view_loc)
             return (found, succ), (has_min, mins)
 
         r, (found, succ), (has_min, mins) = R.fused_dispatch(
-            fcfg.num_shards, per_device, f.trees, sid, keys)
+            fcfg.num_shards, per_device, f.trees, sid, keys, view=view)
         f_owner, s_owner = R.gather_fused(r, (found, succ))
         return _succ_combine(sid, f_owner, s_owner, has_min, mins)
     r = R.route(f.splits, keys)
@@ -363,7 +454,8 @@ def update_batch(fcfg: ForestConfig, f: Forest, kinds: jax.Array,
     upd = jnp.zeros((s,), jnp.int32).at[r.sid].add(
         (kinds != OP_SEARCH).astype(jnp.int32))
     return (Forest(trees=trees, splits=f.splits,
-                   reads=f.reads, updates=f.updates + upd),
+                   reads=f.reads, updates=f.updates + upd,
+                   epoch=f.epoch + 1),
             R.gather_batch(r, dres), MaintenanceStats.reduce(stats))
 
 
@@ -378,7 +470,7 @@ def flush(fcfg: ForestConfig, f: Forest, budget: int = 64):
     trees, stats = R.dispatch(fcfg.num_shards, per_shard, f.trees,
                               sequential=True)
     return (Forest(trees=trees, splits=f.splits,
-                   reads=f.reads, updates=f.updates),
+                   reads=f.reads, updates=f.updates, epoch=f.epoch + 1),
             MaintenanceStats.reduce(stats))
 
 

@@ -151,15 +151,49 @@ def dispatch(num_shards: int, fn, trees, *dense_args, sequential=False):
         )(trees, *dense_args)
 
 
-def fused_dispatch(num_shards: int, fn, trees, sid, keys):
+def build_fused_view(num_shards: int, make_view, trees):
+    """Precompute the fused base-offset view ``fused_dispatch`` would
+    otherwise rebuild per call (the engine's ``ForestBatch.make_view``
+    hook, run under the same mesh layout the dispatch uses).
+
+    On a 1-device mesh this is ``make_view(trees)`` verbatim; on D
+    devices each device fuses its co-resident shards and the per-device
+    views stack to a leading (D,) axis (mirroring the dispatch body's
+    ``x[None]`` wrap), so ``fused_dispatch(view=...)`` can split the same
+    axis back out through shard_map.  The result is pure data derived
+    from ``trees`` — the forest layer caches it keyed on the update
+    epoch and hands it back to read calls until the arena changes."""
+    mesh = forest_mesh(num_shards)
+    d = mesh.devices.size
+    if d == 1:
+        with TR.annotate("router.fuse_view"):
+            return make_view(trees)
+
+    def body(trees_loc):
+        return jax.tree.map(lambda x: x[None], make_view(trees_loc))
+
+    with TR.annotate("router.fuse_view"):
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P("shards"),),
+            out_specs=P("shards"),
+            check_rep=False,
+        )(trees)
+
+
+def fused_dispatch(num_shards: int, fn, trees, sid, keys, view=None):
     """Fused-frontier dispatch: one ``fn`` call per *device*, each over
     the base-offset fusion of its co-resident shards (DESIGN.md §8).
 
-    ``fn(trees_loc, lid[K'], keys[K'])`` sees the device-local stacked
-    (S_loc, ...) arenas, the per-lane local shard index, and its lanes'
-    keys, and returns ``(lane_outs, shard_outs)`` — pytrees whose leaves
-    carry a leading lane axis (K',) resp. per-local-shard axis (S_loc,);
-    ``shard_outs`` may be None.
+    ``fn(trees_loc, lid[K'], keys[K'], view_loc)`` sees the device-local
+    stacked (S_loc, ...) arenas, the per-lane local shard index, its
+    lanes' keys, and the device-local slice of ``view`` (None when no
+    precomputed view was passed — the hook builds it inline), and returns
+    ``(lane_outs, shard_outs)`` — pytrees whose leaves carry a leading
+    lane axis (K',) resp. per-local-shard axis (S_loc,); ``shard_outs``
+    may be None.  ``view`` must come from ``build_fused_view`` over the
+    *same* trees (1-device: passed through as-is; D devices: leading (D,)
+    axis split across the mesh alongside the arenas).
 
     On a 1-device mesh the whole batch passes through in batch order —
     no permutation, no dense scatter (the fused path's claim that routing
@@ -178,26 +212,31 @@ def fused_dispatch(num_shards: int, fn, trees, sid, keys):
     d = mesh.devices.size
     if d == 1:
         with TR.annotate("router.fused"):
-            lane, per_shard = fn(trees, sid, keys)
+            lane, per_shard = fn(trees, sid, keys, view)
         return None, lane, per_shard
     sloc = num_shards // d
     r = route_by(sid // jnp.int32(sloc), d)
     dlid = scatter_dense(r, d, sid % jnp.int32(sloc), jnp.int32(0))
     dkeys = scatter_dense(r, d, keys, jnp.int32(layout.ROUTE_LEFT))
 
-    def body(trees_loc, lid_loc, keys_loc):
-        lane, per_shard = fn(trees_loc, lid_loc[0], keys_loc[0])
+    def body(trees_loc, lid_loc, keys_loc, *view_arg):
+        # each device's view slice arrives with a leading length-1 device
+        # axis (the build's x[None] wrap) — peel it before the hook
+        view_loc = (jax.tree.map(lambda x: x[0], view_arg[0])
+                    if view_arg else None)
+        lane, per_shard = fn(trees_loc, lid_loc[0], keys_loc[0], view_loc)
         # lane leaves regain a leading device axis so shard_map stacks
         # them to (D, K); per-shard leaves concatenate to (S,) directly
         return jax.tree.map(lambda x: x[None], lane), per_shard
 
+    extra = () if view is None else (view,)
     with TR.annotate("router.fused"):
         lane, per_shard = shard_map(
             body, mesh=mesh,
-            in_specs=(P("shards"),) * 3,
+            in_specs=(P("shards"),) * (3 + len(extra)),
             out_specs=P("shards"),
             check_rep=False,
-        )(trees, dlid, dkeys)
+        )(trees, dlid, dkeys, *extra)
     return r, lane, per_shard
 
 

@@ -44,6 +44,7 @@ LOWER_BETTER = {
     "seconds", "compile_seconds", "paged_step_us", "dense_step_us",
     "p50_us", "p99_us", "loads", "blocks_b16", "blocks_b128",
     "hops", "hops_mean", "hops_max", "hops_per_search", "rounds",
+    "inline_maint", "admit_wait", "queue_hwm",
 }
 
 # Primary metric per row, first present wins (name, higher_is_better).

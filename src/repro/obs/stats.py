@@ -259,21 +259,36 @@ class ServeStats(NamedTuple):
     """Decode-loop telemetry: a fixed-size latency reservoir (ring buffer
     over the last ``LATENCY_RESERVOIR`` decode steps — p50/p99 come from
     it host-side) plus flush/pending counters.  Host-driven like the
-    ServeEngine itself, but a pytree so it can ride jitted state."""
+    ServeEngine itself, but a pytree so it can ride jitted state.
+
+    The serve-scheduler fields (queue depth high-water, admission waits,
+    combined ops, fused-view cache hits/builds) default to zero on every
+    ``record`` call, so the legacy lockstep decode loop keeps recording
+    through the same class unchanged."""
 
     steps: jax.Array        # () int32 — decode steps recorded
     flushes: jax.Array      # () int32 — background flushes triggered
     pending_hwm: jax.Array  # () int32 — max pending maintenance seen
+    queue_hwm: jax.Array    # () int32 — max waiting-queue depth seen
+    admitted: jax.Array     # () int32 — requests admitted into live slots
+    admit_wait: jax.Array   # () int32 — total steps admitted reqs waited
+    combined: jax.Array     # () int32 — ops eliminated by op-combining
+    view_hits: jax.Array    # () int32 — fused-view cache hits observed
+    view_builds: jax.Array  # () int32 — fused-view cache builds observed
     lat_us: jax.Array       # (LATENCY_RESERVOIR,) float32 — step latencies
 
     @classmethod
     def zero(cls) -> "ServeStats":
         z = jnp.int32(0)
-        return cls(steps=z, flushes=z, pending_hwm=z,
+        return cls(steps=z, flushes=z, pending_hwm=z, queue_hwm=z,
+                   admitted=z, admit_wait=z, combined=z, view_hits=z,
+                   view_builds=z,
                    lat_us=jnp.zeros((LATENCY_RESERVOIR,), jnp.float32))
 
-    def record(self, seconds, *, pending: int = 0,
-               flushed: bool = False) -> "ServeStats":
+    def record(self, seconds, *, pending: int = 0, flushed: bool = False,
+               queue_depth: int = 0, admitted: int = 0, admit_wait: int = 0,
+               combined: int = 0, view_hits: int = 0,
+               view_builds: int = 0) -> "ServeStats":
         """Fold one decode step in (ring-buffer write at ``steps`` mod
         capacity).  Host-side floats/bools or traced values both work."""
         idx = self.steps % self.lat_us.shape[0]
@@ -281,16 +296,28 @@ class ServeStats(NamedTuple):
             steps=self.steps + 1,
             flushes=self.flushes + jnp.int32(flushed),
             pending_hwm=jnp.maximum(self.pending_hwm, jnp.int32(pending)),
+            queue_hwm=jnp.maximum(self.queue_hwm, jnp.int32(queue_depth)),
+            admitted=self.admitted + jnp.int32(admitted),
+            admit_wait=self.admit_wait + jnp.int32(admit_wait),
+            combined=self.combined + jnp.int32(combined),
+            view_hits=self.view_hits + jnp.int32(view_hits),
+            view_builds=self.view_builds + jnp.int32(view_builds),
             lat_us=self.lat_us.at[idx].set(jnp.float32(seconds) * 1e6),
         )
 
     @classmethod
     def reduce(cls, stacked: "ServeStats") -> "ServeStats":
-        """Aggregate stacked (N,) legs: counters sum, the high-water mark
-        maxes, and the reservoirs concatenate (percentiles over the union)."""
+        """Aggregate stacked (N,) legs: counters sum, the high-water marks
+        max, and the reservoirs concatenate (percentiles over the union)."""
         return cls(steps=jnp.sum(stacked.steps),
                    flushes=jnp.sum(stacked.flushes),
                    pending_hwm=jnp.max(stacked.pending_hwm),
+                   queue_hwm=jnp.max(stacked.queue_hwm),
+                   admitted=jnp.sum(stacked.admitted),
+                   admit_wait=jnp.sum(stacked.admit_wait),
+                   combined=jnp.sum(stacked.combined),
+                   view_hits=jnp.sum(stacked.view_hits),
+                   view_builds=jnp.sum(stacked.view_builds),
                    lat_us=stacked.lat_us.reshape(-1))
 
     def valid_latencies(self) -> np.ndarray:
@@ -307,6 +334,12 @@ class ServeStats(NamedTuple):
 
     def asdict(self) -> dict:
         out = {"steps": int(self.steps), "flushes": int(self.flushes),
-               "pending_hwm": int(self.pending_hwm)}
+               "pending_hwm": int(self.pending_hwm),
+               "queue_hwm": int(self.queue_hwm),
+               "admitted": int(self.admitted),
+               "admit_wait": int(self.admit_wait),
+               "combined": int(self.combined),
+               "view_hits": int(self.view_hits),
+               "view_builds": int(self.view_builds)}
         out.update(self.percentiles())
         return out

@@ -1,0 +1,30 @@
+"""repro.serve — continuous-batching serve scheduler (DESIGN.md §10).
+
+The inference-stack shape over the DeltaTree machinery: an
+admission-controlled request queue with slot recycling
+(`queue.RequestQueue`), a step scheduler composing live decode lanes
+with admitted prefills (`scheduler.ServeScheduler`), a same-key
+op-combining pass over each step's staged index ops (`combine`), and
+index maintenance as a background worker off the decode path
+(`worker.MaintenanceWorker`).  ``repro.serving.ServeEngine`` is a thin
+compat shim over `ServeScheduler`; the legacy lockstep loop survives as
+``repro.serving.engine.LockstepServeEngine`` (the parity oracle).
+"""
+
+from repro.serve.combine import combine_ops, dedupe_lookups
+from repro.serve.queue import RequestQueue, ServeRequest
+from repro.serve.scheduler import SchedulerConfig, ServeScheduler
+from repro.serve.trace import StepPlan, synth_trace
+from repro.serve.worker import MaintenanceWorker
+
+__all__ = [
+    "MaintenanceWorker",
+    "RequestQueue",
+    "SchedulerConfig",
+    "ServeRequest",
+    "ServeScheduler",
+    "StepPlan",
+    "combine_ops",
+    "dedupe_lookups",
+    "synth_trace",
+]

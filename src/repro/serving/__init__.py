@@ -1,12 +1,34 @@
+"""Serving package: ΔTree-paged KV cache + serve engines.
+
+The engine names resolve lazily: ``repro.serving.engine`` pulls in the
+continuous-batching scheduler (`repro.serve`), which itself imports the
+pager from this package — eager re-export here would close that loop
+mid-initialization.  Pager names stay eager (leaf modules).
+"""
+
 from repro.serving.pager import DeltaPager, PagerConfig, make_pager
-from repro.serving.engine import ServeEngine
 from repro.serving.sharded_pager import ShardedDeltaPager, ShardedPagerConfig
 
 __all__ = [
     "DeltaPager",
+    "LockstepServeEngine",
     "PagerConfig",
     "ServeEngine",
     "ShardedDeltaPager",
     "ShardedPagerConfig",
     "make_pager",
 ]
+
+_LAZY = ("ServeEngine", "LockstepServeEngine")
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from repro.serving import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,15 +1,25 @@
-"""Batched serving engine: continuous batching over a ΔTree-paged KV cache.
+"""Serving engines over the ΔTree-paged KV cache.
 
-Supports the GQA decoder families (dense / moe / vlm backbones).  Layer
-K/V live in page pools (L, NP, PS, KVH, HD); every decode step:
-  1. resolves each active sequence's block table via the ΔTree pager
-     (wait-free batched search — the paper's hot path),
-  2. runs `delta_paged_attention` per layer (Pallas kernel, compiled on
-     TPU, interpret mode elsewhere — `kernels.ops.default_interpret`),
-  3. appends the new K/V into the tail page slot, allocating a fresh page
-     (ΔTree insert) when a sequence crosses a page boundary.
+``ServeEngine`` — the public name tests/benchmarks construct — is now a
+thin compat shim over the continuous-batching scheduler
+(`repro.serve.scheduler.ServeScheduler`): same constructor signature
+(``max_batch`` maps to the scheduler's live-lane count), same
+``submit/step/active`` surface, strictly more behavior (admission
+control, slot recycling, combined staged updates, background
+maintenance).
 
-Finished sequences free their pages (ΔTree delete → Merge compaction).
+``LockstepServeEngine`` is the pre-scheduler loop, kept verbatim as the
+parity oracle: it steps all live requests in rigid lockstep, applies
+every pager mutation immediately, and drains maintenance *on* the decode
+path — either on the deprecated ``flush_every`` stride or when
+``PagerConfig.maint_high_water`` items sit buffered.  The static-trace
+parity test holds the scheduler bit-identical to it under no-churn +
+eager maintenance.
+
+Both engines share the exact same model-side machinery
+(`repro.serve.decode`): dense prefill scattered into pages, then per
+step one `delta_paged_attention` pass over the pager-resolved block
+tables (wait-free batched search — the paper's hot path).
 """
 
 from __future__ import annotations
@@ -17,25 +27,33 @@ from __future__ import annotations
 import dataclasses
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import transformer as T
-from repro.models.config import ModelConfig
-from repro.models.layers.attention import attn_out, qkv_proj
-from repro.models.layers.basic import (
-    embed_apply,
-    logits_apply,
-    mlp_apply,
-    rmsnorm_apply,
-)
-from repro.models.layers.moe import moe_apply
-from repro.kernels.delta_paged_attention import paged_decode_attention
 from repro.api import Index
+from repro.models.config import ModelConfig
 from repro.obs import trace as OT
 from repro.obs.stats import ServeStats
+from repro.serve import decode as D
+from repro.serve.scheduler import SchedulerConfig, ServeScheduler
 from repro.serving.pager import DeltaPager, PagerConfig, make_pager
+
+
+class ServeEngine(ServeScheduler):
+    """Compat shim: the legacy constructor over the new scheduler.
+
+    ``max_batch`` becomes ``SchedulerConfig.max_live`` — the bounded
+    decode-lane count the admission queue fills.  Everything else
+    (admission control bounds, combining, the maintenance high-water)
+    comes from the pager config / scheduler defaults."""
+
+    def __init__(self, cfg: ModelConfig, params, pager_cfg: PagerConfig,
+                 max_batch: int = 8, *, index: Index | None = None,
+                 pager: DeltaPager | None = None):
+        super().__init__(cfg, params, pager_cfg,
+                         SchedulerConfig(max_live=max_batch),
+                         index=index, pager=pager)
+        self.max_batch = max_batch
 
 
 @dataclasses.dataclass
@@ -47,7 +65,11 @@ class Request:
     done: bool = False
 
 
-class ServeEngine:
+class LockstepServeEngine:
+    """The legacy loop: submit prefills immediately, every step decodes
+    all live requests (capped at ``max_batch``), mutations hit the index
+    one call at a time, maintenance drains inline."""
+
     def __init__(self, cfg: ModelConfig, params, pager_cfg: PagerConfig,
                  max_batch: int = 8, *, index: Index | None = None,
                  pager: DeltaPager | None = None):
@@ -70,7 +92,7 @@ class ServeEngine:
         self.active: dict[int, Request] = {}
         self.lengths: dict[int, int] = {}
         self._next_id = 0
-        self._steps = 0   # decode steps taken (drives the background flush)
+        self._steps = 0   # decode steps taken (drives the inline flush)
         self.obs = ServeStats.zero()   # decode-latency reservoir + flush log
 
     # ------------------------------------------------------------- submit ---
@@ -81,43 +103,13 @@ class ServeEngine:
         req = Request(sid, np.asarray(prompt, np.int32), max_new)
         n_blocks = -(-len(req.prompt) // self.ps)
         pages = self.pager.allocate(sid, n_blocks)
-        self._prefill(req, pages)
+        self.k_pages, self.v_pages, s, tok = D.prefill_to_pages(
+            self.cfg, self.params, self.ps, self.k_pages, self.v_pages,
+            req.prompt, pages)
+        self.lengths[sid] = s
+        req.out.append(tok)
         self.active[sid] = req
         return sid
-
-    def _layer_params(self):
-        """Unstack scan-stacked params into per-layer list."""
-        cfg = self.cfg
-        n_pro, period, reps = T._layout(cfg)
-        out = list(self.params["prologue"])
-        for r in range(reps):
-            for j in range(period):
-                out.append(jax.tree.map(lambda x: x[r], self.params["slots"][j]))
-        return out
-
-    def _prefill(self, req: Request, pages: list[int]):
-        """Dense prefill, then scatter K/V into the allocated pages."""
-        cfg = self.cfg
-        toks = jnp.asarray(req.prompt)[None]
-        s = toks.shape[1]
-        caches = T.init_caches(cfg, 1, -(-s // self.ps) * self.ps)
-        logits, caches = T.prefill(self.params, cfg, toks, caches)
-        # flatten slot caches to per-layer order
-        n_pro, period, reps = T._layout(cfg)
-        layer_caches = list(caches["prologue"])
-        for r in range(reps):
-            for j in range(period):
-                layer_caches.append(
-                    jax.tree.map(lambda x: x[r], caches["slots"][j]))
-        for li, c in enumerate(layer_caches):
-            k = c["k"][0]  # (Smax, KVH, HD)
-            v = c["v"][0]
-            for bi, page in enumerate(pages):
-                sl = slice(bi * self.ps, (bi + 1) * self.ps)
-                self.k_pages = self.k_pages.at[li, page].set(k[sl])
-                self.v_pages = self.v_pages.at[li, page].set(v[sl])
-        self.lengths[req.seq_id] = s
-        req.out.append(int(jnp.argmax(logits[0, -1])))
 
     # --------------------------------------------------------------- step ---
 
@@ -143,8 +135,6 @@ class ServeEngine:
             return {}, False
         # grow pages where the next token crosses a page boundary
         for sid in sids:
-            if self.lengths[sid] % self.ps == 0 and self.lengths[sid] > 0:
-                pass  # boundary handled below via need-alloc check
             needed = self.lengths[sid] // self.ps + 1
             have = self.pager.seq_blocks[sid]
             if needed > have:
@@ -155,19 +145,23 @@ class ServeEngine:
         bt = self.pager.block_tables(sids, maxp)          # ΔTree hot path
         tokens = jnp.asarray([[self.active[s].out[-1]] for s in sids], jnp.int32)
 
-        logits, self.k_pages, self.v_pages = _paged_decode_step(
-            self.params, cfg, self._layer_params(), tokens,
+        logits, self.k_pages, self.v_pages = D.paged_decode_step(
+            self.params, cfg, D.layer_params(cfg, self.params), tokens,
             self.k_pages, self.v_pages, jnp.asarray(bt), jnp.asarray(lens),
             self.ps,
         )
         for sid in sids:
             self.lengths[sid] += 1
         self._steps += 1
-        # background maintenance: with a non-eager pager policy, updates
+        # inline maintenance: with a non-eager pager policy, updates
         # (allocate/free) only append/mark and the structural work drains
-        # here, amortized across decode steps instead of blocking a batch
-        fe = getattr(self.pager.cfg, "flush_every", 0)
-        flushed = bool(fe and self._steps % fe == 0)
+        # here — on the pending high-water mark (preferred) or the
+        # deprecated fixed stride.  Both fields are explicit PagerConfig
+        # surface now, no duck-typed getattr probe.
+        hw = self.pager.cfg.maint_high_water
+        fe = self.pager.cfg.flush_every
+        flushed = bool((hw and self.pager.pending >= hw)
+                       or (fe and self._steps % fe == 0))
         if flushed:
             self.pager.flush()
         out = {}
@@ -184,36 +178,3 @@ class ServeEngine:
     def finish(self, sid: int):
         self.pager.free_seq(sid)
         self.lengths.pop(sid, None)
-
-
-def _paged_decode_step(params, cfg: ModelConfig, layer_params, tokens,
-                       k_pages, v_pages, block_tables, lengths, page_size):
-    """One decode step over paged caches: per layer, scatter the new token's
-    K/V into each sequence's tail page slot, then run the Pallas paged
-    decode-attention kernel over the block table."""
-    x = embed_apply(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
-    positions = lengths[:, None].astype(jnp.int32)
-    b = tokens.shape[0]
-    rows = jnp.arange(b)
-    tail_page = block_tables[rows, lengths // page_size]
-    tail_off = lengths % page_size
-    for li, lp in enumerate(layer_params):
-        kinds = (cfg.layer_kind(li), cfg.ffn_kind(li))
-        h = rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
-        q, k, v = qkv_proj(lp["mixer"], cfg, h, positions)
-        k_pages = k_pages.at[li, tail_page, tail_off].set(
-            k[:, 0].astype(k_pages.dtype))
-        v_pages = v_pages.at[li, tail_page, tail_off].set(
-            v[:, 0].astype(v_pages.dtype))
-        o = paged_decode_attention(
-            q[:, 0], k_pages[li], v_pages[li], block_tables, lengths + 1)
-        x = x + attn_out(lp["mixer"], o[:, None])
-        if "ffn" in lp:
-            h2 = rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
-            if kinds[1] == "moe":
-                x = x + moe_apply(lp["ffn"], cfg, h2)
-            else:
-                x = x + mlp_apply(lp["ffn"], h2)
-    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
-    logits = logits_apply(params["embed"], x, cfg.logits_softcap)
-    return logits, k_pages, v_pages

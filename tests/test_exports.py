@@ -23,6 +23,7 @@ PACKAGES = [
     "repro.obs",
     "repro.optim",
     "repro.parallel",
+    "repro.serve",
     "repro.serving",
     "repro.train",
 ]

@@ -1,0 +1,356 @@
+"""Continuous-batching serve scheduler (DESIGN.md §10).
+
+Host-side units for the queue / op-combining / maintenance-worker
+pieces, the fused-view hoisting regression (consecutive reads build the
+``fuse_arenas`` view once; updates invalidate), and the two engine legs:
+static-trace parity (no churn + eager maintenance → the scheduler is
+bit-identical to the legacy lockstep loop) and the churn leg (arrivals,
+cancels, zipf probes, deferred maintenance drained by the worker —
+every finished request still matches the dense-decode oracle).
+"""
+
+import dataclasses
+import types
+import warnings
+
+import numpy as np
+import pytest
+
+from tests._subproc import run_py
+
+# ---------------------------------------------------------------------------
+# op combining (pure numpy)
+# ---------------------------------------------------------------------------
+
+
+def test_combine_annihilates_insert_delete_pairs():
+    from repro.api.opbatch import OP_DELETE, OP_INSERT, OP_SEARCH
+    from repro.serve.combine import combine_ops
+
+    kinds = [OP_INSERT, OP_INSERT, OP_DELETE, OP_SEARCH, OP_SEARCH,
+             OP_INSERT, OP_DELETE, OP_DELETE]
+    keys = [5, 5, 5, 9, 9, 7, 7, 5]
+    pays = [50, 51, 0, 0, 0, 70, 0, 0]
+    k2, key2, _, combined = combine_ops(kinds, keys, pays)
+    # DELETE@2 pops the *nearest* open INSERT (row 1), DELETE@7 pops row
+    # 0; the (INSERT 7, DELETE 7) pair annihilates; the duplicate SEARCH
+    # 9 collapses.  Only the first SEARCH survives.
+    assert combined == 7
+    assert k2.tolist() == [OP_SEARCH] and key2.tolist() == [9]
+
+
+def test_combine_keeps_unmatched_rows_in_batch_order():
+    from repro.api.opbatch import OP_DELETE, OP_INSERT, OP_SEARCH
+    from repro.serve.combine import combine_ops
+
+    # a DELETE with no open INSERT targets a pre-existing key: NOT a
+    # no-op pair, must survive (the discipline's asymmetry)
+    kinds = [OP_DELETE, OP_INSERT, OP_SEARCH]
+    keys = [3, 4, 3]
+    k2, key2, p2, combined = combine_ops(kinds, keys, [0, 40, 0])
+    assert combined == 0
+    assert k2.tolist() == kinds and key2.tolist() == keys
+    assert p2.tolist() == [0, 40, 0]
+
+
+def test_dedupe_lookups_roundtrip():
+    from repro.serve.combine import dedupe_lookups
+
+    keys = np.asarray([9, 3, 9, 9, 3], np.int64)
+    uniq, inverse, combined = dedupe_lookups(keys)
+    assert combined == 3 and len(uniq) == 2
+    np.testing.assert_array_equal(uniq[inverse], keys)
+
+
+# ---------------------------------------------------------------------------
+# request queue
+# ---------------------------------------------------------------------------
+
+
+def _req(sid, submit_step=0, max_new=4):
+    from repro.serve.queue import ServeRequest
+
+    return ServeRequest(sid, np.zeros(1, np.int32), max_new,
+                        submit_step=submit_step)
+
+
+def test_queue_fifo_admission_and_slot_recycling():
+    from repro.serve.queue import RequestQueue
+
+    q = RequestQueue(2)
+    reqs = [_req(i) for i in range(4)]
+    assert all(q.submit(r) for r in reqs)
+    adm = q.admit(step=3)
+    assert [(s, r.seq_id) for s, r in adm] == [(0, 0), (1, 1)]
+    assert reqs[0].wait_steps == 3 and reqs[1].wait_steps == 3
+    q.release(0)                       # a finisher departs slot 0
+    adm2 = q.admit(step=5)             # ... and the SAME slot refills
+    assert [(s, r.seq_id) for s, r in adm2] == [(0, 2)]
+    assert q.depth == 1 and q.n_live == 2
+    assert [r.seq_id for _, r in q.live()] == [2, 1]   # slot order
+
+
+def test_queue_admission_control_bounds_and_cancel():
+    from repro.serve.queue import RequestQueue
+
+    q = RequestQueue(2, max_waiting=2)
+    reqs = [_req(i) for i in range(5)]
+    oks = [q.submit(r) for r in reqs]
+    assert oks == [True, True, False, False, False]
+    assert q.rejected == 3 and reqs[2].cancelled
+    q.admit(step=0)
+    late = _req(9)
+    assert q.submit(late)              # FIFO drained: admitted again
+    assert q.cancel(9) == "waiting" and q.depth == 0
+    assert q.cancel(0) == "live" and reqs[0].cancelled
+    assert q.cancel(123) == "missing"
+
+
+# ---------------------------------------------------------------------------
+# maintenance worker
+# ---------------------------------------------------------------------------
+
+
+class _StubPager:
+    def __init__(self, high_water):
+        self.pending = 0
+        self.flushes = 0
+        self.cfg = types.SimpleNamespace(maint_high_water=high_water)
+
+    def flush(self):
+        self.flushes += 1
+        self.pending = 0
+        return None
+
+
+def test_worker_drains_on_high_water_not_stride():
+    from repro.serve.worker import MaintenanceWorker
+
+    pg = _StubPager(high_water=4)
+    w = MaintenanceWorker(pg)          # inherits the pager config's mark
+    assert w.high_water == 4
+    pg.pending = 3
+    assert not w.maybe_drain(1) and pg.flushes == 0
+    pg.pending = 4
+    assert w.maybe_drain(2)
+    assert pg.flushes == 1 and w.drains == 1 and w.last_drain_step == 2
+    pg.pending = 1
+    assert not w.maybe_drain(3)
+    assert w.maybe_drain(4, force=True)      # the final barrier
+    # <=0 disables the trigger entirely (but force still drains)
+    w0 = MaintenanceWorker(pg, high_water=0)
+    pg.pending = 100
+    assert not w0.maybe_drain(5)
+    assert w0.maybe_drain(5, force=True)
+
+
+# ---------------------------------------------------------------------------
+# pager config: explicit trigger fields, flush_every deprecation
+# ---------------------------------------------------------------------------
+
+
+def test_flush_every_deprecated_on_both_pager_configs():
+    from repro.serving.pager import PagerConfig
+    from repro.serving.sharded_pager import ShardedPagerConfig
+
+    with pytest.warns(DeprecationWarning, match="flush_every"):
+        PagerConfig(flush_every=4)
+    with pytest.warns(DeprecationWarning, match="flush_every"):
+        ShardedPagerConfig(flush_every=4)
+    with warnings.catch_warnings():    # the replacement field never warns
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = PagerConfig(maint_high_water=8)
+    assert cfg.maint_high_water == 8 and cfg.flush_every == 0
+
+
+# ---------------------------------------------------------------------------
+# fused-view hoisting: build once across reads, invalidate on update
+# ---------------------------------------------------------------------------
+
+
+def _lockstep_fcfg():
+    from repro.core import TreeConfig
+    from repro.distributed import forest as F
+
+    return F.ForestConfig(
+        num_shards=4, key_max=4000, fused=True,
+        tree=TreeConfig(height=4, max_dnodes=64, buf_cap=8,
+                        engine="lockstep"))
+
+
+def test_fused_view_built_once_across_consecutive_reads():
+    import jax.numpy as jnp
+
+    from repro.distributed import forest as F
+
+    fcfg = _lockstep_fcfg()
+    vals = np.arange(10, 4000, 17, dtype=np.int32)
+    f = F.bulk_build(fcfg, vals)
+    q = jnp.asarray(vals[:16])
+    F.reset_fused_view_cache()
+    for _ in range(3):                 # consecutive fused reads ...
+        F.search_batch(fcfg, f, q)
+    F.successor_jit(fcfg, f, q)        # ... of any read kind
+    s = F.fused_view_cache_stats()
+    assert s["builds"] == 1 and s["hits"] == 3, s
+
+    # an update bumps the epoch: the next read rebuilds, then re-reuses
+    f, res, _ = F.update_batch(fcfg, f, jnp.asarray([1], jnp.int32),
+                               jnp.asarray([11], jnp.int32))
+    assert bool(np.asarray(res)[0])
+    F.search_batch(fcfg, f, q)
+    F.search_batch(fcfg, f, q)
+    s = F.fused_view_cache_stats()
+    assert s["builds"] == 2 and s["hits"] == 4, s
+
+    # flush (maintenance) invalidates too — structural moves change the
+    # arena even when the key set does not
+    f, _ = F.flush(fcfg, f)
+    F.search_batch(fcfg, f, q)
+    assert F.fused_view_cache_stats()["builds"] == 3
+
+
+def test_fused_view_cached_reads_match_dense_dispatch():
+    import jax.numpy as jnp
+
+    from repro.distributed import forest as F
+
+    fcfg = _lockstep_fcfg()
+    fcfg_dense = dataclasses.replace(fcfg, fused=False)
+    vals = np.arange(5, 4000, 23, dtype=np.int32)
+    f = F.bulk_build(fcfg, vals)
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.integers(0, 4000, size=64).astype(np.int32))
+    F.reset_fused_view_cache()
+    for _ in range(2):                 # second pass runs off the cache
+        found_f, hops_f = F.search_batch(fcfg, f, q)
+        found_d, hops_d = F.search_batch(fcfg_dense, f, q)
+        np.testing.assert_array_equal(np.asarray(found_f),
+                                      np.asarray(found_d))
+        np.testing.assert_array_equal(np.asarray(hops_f),
+                                      np.asarray(hops_d))
+    assert F.fused_view_cache_stats()["hits"] >= 1
+
+
+def test_fused_view_cache_multidevice():
+    """The hoisted view crosses shard_map: built under the mesh once,
+    passed back in as a sharded operand on later reads (8 fake devs)."""
+    out = run_py("""
+import numpy as np, jax.numpy as jnp
+from repro.core import TreeConfig
+from repro.distributed import forest as F
+
+fcfg = F.ForestConfig(
+    num_shards=8, key_max=4000, fused=True,
+    tree=TreeConfig(height=4, max_dnodes=64, buf_cap=8, engine="lockstep"))
+vals = np.arange(10, 4000, 13, dtype=np.int32)
+f = F.bulk_build(fcfg, vals)
+q = jnp.asarray(vals[:32])
+F.reset_fused_view_cache()
+for _ in range(3):
+    found, hops = F.search_batch(fcfg, f, q)
+assert np.asarray(found).all()
+s = F.fused_view_cache_stats()
+assert s["builds"] == 1 and s["hits"] == 2, s
+import dataclasses
+dense = dataclasses.replace(fcfg, fused=False)
+fd, hd = F.search_batch(dense, f, q)
+np.testing.assert_array_equal(np.asarray(found), np.asarray(fd))
+np.testing.assert_array_equal(np.asarray(hops), np.asarray(hd))
+print("MULTIDEV VIEW OK")
+""", devices=8)
+    assert "MULTIDEV VIEW OK" in out
+
+
+# ---------------------------------------------------------------------------
+# engine legs (subprocess: pager needs JAX_ENABLE_X64)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_matches_lockstep_on_static_trace():
+    """No churn + eager maintenance: the scheduler's pipeline degenerates
+    to the lockstep loop — outputs must be bit-identical, page pool fully
+    reclaimed by both, same index search count."""
+    out = run_py("""
+import numpy as np, jax
+from repro.configs import get_smoke_config
+from repro.models.registry import api
+from repro.serving import ServeEngine, PagerConfig
+from repro.serving.engine import LockstepServeEngine
+
+cfg = get_smoke_config("granite_8b")
+m = api(cfg)
+params = m.init_params(jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+pc = PagerConfig(num_pages=64, page_size=4, max_seqs=16, max_blocks=64,
+                 tree_height=4)
+prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+           for n in (5, 9, 3, 7)]
+outs, searches = [], []
+for cls in (LockstepServeEngine, ServeEngine):
+    eng = cls(cfg, params, pc, max_batch=4)
+    sids = [eng.submit(p, max_new=6) for p in prompts]
+    for _ in range(8):
+        eng.step()
+    assert all(eng.active[s].done for s in sids)
+    outs.append([eng.active[s].out for s in sids])
+    searches.append(eng.pager.stats["searches"])
+    assert len(eng.pager.free_pages) == pc.num_pages
+assert outs[0] == outs[1], (outs[0], outs[1])
+assert searches[0] == searches[1], searches
+print("STATIC PARITY OK")
+""", x64=True, timeout=1800)
+    assert "STATIC PARITY OK" in out
+
+
+def test_churn_trace_matches_dense_oracle():
+    """Sustained mixed arrivals + cancels + zipf probe traffic, deferred
+    maintenance drained by the worker at the high-water mark: every
+    finished request still bit-matches the dense decode oracle, ops were
+    combined, pages reclaimed, and the decode path ran ZERO inline
+    structural maintenance."""
+    out = run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.models.registry import api
+from repro.serve import SchedulerConfig, ServeScheduler, synth_trace
+from repro.serving import PagerConfig
+
+cfg = get_smoke_config("granite_8b")
+m = api(cfg)
+params = m.init_params(jax.random.PRNGKey(0))
+pc = PagerConfig(num_pages=128, page_size=4, max_seqs=64, max_blocks=128,
+                 tree_height=4, maintenance="deferred", maint_high_water=6)
+sch = ServeScheduler(cfg, params, pc, SchedulerConfig(max_live=3))
+plans = synth_trace(14, seed=11, arrive_p=0.6, prompt_lens=(3, 9),
+                    max_new=(3, 7), cancel_p=0.25, probes_per_step=12,
+                    vocab=cfg.vocab_size)
+summary = sch.run_trace(plans)
+assert summary["finished"] >= 5, summary
+obs = sch.obs.asdict()
+assert obs["combined"] > 0, obs                 # hot keys collapsed
+assert sch.worker.stats()["drains"] > 0          # worker path ran ...
+assert sch.pager.stats["inline_maint"] == 0      # ... decode path did not
+assert len(sch.pager.free_pages) == pc.num_pages # churned pool reclaimed
+assert obs["queue_hwm"] >= 1, obs
+# every request that ever held a slot shows up in the admission count
+# (rejected / cancelled-while-waiting never do)
+assert obs["admitted"] == sum(
+    r.admit_step >= 0 for r in sch.active.values()), obs
+for sid, req in sch.active.items():
+    if not req.done:
+        continue
+    caches = m.init_caches(1, 128)
+    logits, caches = m.prefill(params, jnp.asarray(req.prompt)[None], caches)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    ln = len(req.prompt)
+    while len(toks) < req.max_new:
+        lg, caches = m.decode_step(params,
+            jnp.asarray([[toks[-1]]], jnp.int32), caches,
+            jnp.asarray([ln], jnp.int32))
+        toks.append(int(jnp.argmax(lg[0, 0])))
+        ln += 1
+    assert req.out == toks, (sid, req.out, toks)
+print("CHURN ORACLE OK", summary["finished"])
+""", x64=True, timeout=1800)
+    assert "CHURN ORACLE OK" in out

@@ -1,0 +1,85 @@
+"""q_tile autotune sweep CLI: time the fused walk per candidate tile and
+height, emit one JSON row per (height, tile), and print the winners as a
+``kernels.autotune.BAKED``-style table ready to paste back into the repo.
+
+Run it through the compiled harness so the winners describe the mode that
+matters::
+
+    ./run_compiled.sh benchmarks/autotune_qtile.py --heights 5,7,9
+    REPRO_PALLAS_AUTOTUNE=.autotune.json \\
+        ./run_compiled.sh benchmarks/autotune_qtile.py --heights 7
+
+With ``REPRO_PALLAS_AUTOTUNE`` set, the winners are also merged into that
+cache file, and every later ``q_tile=None`` walk in the same environment
+picks them up automatically (``ops.default_q_tile``).  ``--payload-bits``
+adds an int64 map-mode sweep leg (needs JAX_ENABLE_X64).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import DEFAULT_SEED, emit
+
+DEFAULT_HEIGHTS = (5, 7, 9)
+
+
+def run(heights, *, batch: int = 1024, n_keys: int = 50_000,
+        repeats: int = 3, iters: int = 10, payload_bits: int = 0,
+        seed: int = DEFAULT_SEED, write_cache: bool = True):
+    from repro.kernels import autotune
+    from repro.kernels.ops import default_interpret
+
+    compiled = not default_interpret()
+    bits = 64 if payload_bits else 32
+    rows, winners = [], {}
+    for h in heights:
+        best, timings = autotune.sweep_height(
+            h, batch=batch, n_keys=n_keys, repeats=repeats, iters=iters,
+            payload_bits=payload_bits, seed=seed)
+        for tile, sec in sorted(timings.items()):
+            rows.append(emit({
+                "bench": "autotune_qtile", "backend": "deltatree",
+                "engine": "lockstep", "height": h, "q_tile": tile,
+                "bits": bits, "batch": batch, "seed": seed,
+                "seconds": round(sec, 6), "winner": tile == best}))
+        winners[autotune._key(h, compiled, bits)] = best
+    if write_cache:
+        path = autotune.save_cache(winners)
+        if path:
+            print(f"# autotune cache updated -> {path}", flush=True)
+    mode = "compiled" if compiled else "interpret"
+    print(f"# BAKED entries ({mode}, {bits}-bit):", flush=True)
+    for h in heights:
+        key = autotune._key(h, compiled, bits)
+        print(f"#     ({h}, {compiled}, {bits}): {winners[key]},", flush=True)
+    return rows
+
+
+def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
+         smoke=False, heights=DEFAULT_HEIGHTS, payload_bits=0):
+    del backend, engine  # single-backend sweep by construction
+    if smoke:
+        return run((5,), batch=256, n_keys=2_000, repeats=1, iters=2,
+                   payload_bits=payload_bits, seed=seed)
+    if quick:
+        return run(heights, payload_bits=payload_bits, seed=seed)
+    return run(heights, batch=4096, n_keys=500_000, repeats=5, iters=20,
+               payload_bits=payload_bits, seed=seed)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--heights", default=None,
+                    help="comma-separated tree heights (default 5,7,9)")
+    ap.add_argument("--payload-bits", type=int, default=0,
+                    help="nonzero adds the int64 map-mode leg "
+                         "(requires JAX_ENABLE_X64)")
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED)
+    args = ap.parse_args()
+    hs = (tuple(int(x) for x in args.heights.split(","))
+          if args.heights else DEFAULT_HEIGHTS)
+    main(quick=not args.full, seed=args.seed, smoke=args.smoke,
+         heights=hs, payload_bits=args.payload_bits)

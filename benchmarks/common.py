@@ -78,17 +78,28 @@ def add_common_args(ap) -> None:
 
 def resolved_q_tile(ix) -> int:
     """The lockstep kernel tile this Index would run with (cfg override,
-    else the env/default) — recorded in benchmark JSON rows."""
+    else the env/autotune/default chain) — recorded in benchmark JSON
+    rows."""
     from repro.api.index import cfg_attr
     from repro.kernels.ops import default_q_tile
 
     qt = cfg_attr(ix.cfg, "q_tile")
-    return int(qt) if qt else default_q_tile()
+    if qt:
+        return int(qt)
+    return default_q_tile(cfg_attr(ix.cfg, "height"),
+                          cfg_attr(ix.cfg, "payload_bits") or 0)
 
 
 def engine_supported(backend: str, engine: str | None) -> bool:
-    """True when ``backend`` can run its reads under ``engine``."""
-    return engine is None or engine in supported_engines(backend)
+    """True when ``backend`` can run its reads under ``engine``
+    (``"auto"`` is checked against what it would resolve to)."""
+    if engine is None:
+        return True
+    if engine == "auto":
+        from repro.core.engine import resolve_engine
+
+        engine = resolve_engine(engine, backend)
+    return engine in supported_engines(backend)
 
 
 def dispatch_of(ix) -> str | None:
@@ -174,9 +185,18 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
     rng = np.random.default_rng(seed)
     chunked = backend in CHUNKED_BACKENDS
     any_update = update_pct > 0
+    # walk_launches: kernel launches per search dispatch under the
+    # lockstep engine — 1 for the fused single-launch driver, the step's
+    # frontier round count for the per-round driver (one veb_walk_rows
+    # launch per round; the round count is device data, accumulated
+    # alongside the stats merge so the loop still never syncs the host).
+    from repro.api.index import cfg_attr
+
+    lockstep = ix.engine == "lockstep"
+    fused_walk = lockstep and bool(cfg_attr(ix.cfg, "walk_fused", True))
 
     def one_step(ix, count=False):
-        nonlocal n_search, n_update, sacc, racc
+        nonlocal n_search, n_update, sacc, racc, wl_acc
         kinds = mixed_kinds(rng, batch, update_pct)
         keys = rng.integers(1, key_hi, size=batch).astype(np.int32)
         # fixed shapes: searches on the whole batch (wait-free snapshot);
@@ -190,6 +210,11 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
             sacc = rs.search if sacc is None else sacc.merge(rs.search)
             if rs.router is not None:
                 racc = rs.router if racc is None else racc.merge(rs.router)
+            if lockstep:
+                step_launches = (jnp.int32(1) if fused_walk
+                                 else rs.search.rounds)
+                wl_acc = (step_launches if wl_acc is None
+                          else wl_acc + step_launches)
         n_upd_step = 0
         if any_update:
             uidx = np.flatnonzero(kinds != 0)
@@ -206,7 +231,7 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
         return ix, found
 
     n_search = n_update = 0
-    sacc = racc = None
+    sacc = racc = wl_acc = None
     # warmup compile — two iterations: a sharded backend's first update
     # output carries mesh shardings the host-built input didn't, so the
     # second call retraces once; after that the jit cache is steady.
@@ -240,6 +265,8 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
     dt = time.perf_counter() - t0
     row = {"backend": backend, "engine": ix.engine,
            "dispatch": dispatch_of(ix),
+           "walk": (("fused" if fused_walk else "per-round")
+                    if lockstep else None),
            "maintenance": ix.maintenance, "q_tile": resolved_q_tile(ix),
            "flush_every": flush_every,
            "seed": seed, "update_pct": update_pct, "batch": batch,
@@ -252,6 +279,8 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
         row.update(hops_mean=sd["hops_mean"], hops_max=sd["hops_max"],
                    rounds=sd["rounds"], buffer_hits=sd["buffer_hits"],
                    hops_hist=sd["hops_hist"])
+    if wl_acc is not None:
+        row["walk_launches"] = round(float(wl_acc) / steps, 2)
     if racc is not None:
         rd = racc.asdict()
         row.update(shard_lanes=rd["lanes"], shard_skew=rd["skew"],

@@ -9,10 +9,15 @@ engine; each per-engine JSON row records ``engine`` (and ``dispatch``),
 and the lockstep rows additionally record ``speedup_vs_scalar``.  The
 forest backend gets a third leg: lockstep under the dense per-shard vmap
 dispatch (``fused=False``), so the default fused row also records
-``speedup_vs_vmap`` — the cross-shard frontier's own win.  On CPU the
-lockstep engine pays the Pallas interpreter tax — the rows still pin down
-result parity cost; on TPU (compiled kernel, one contiguous row DMA per
-query per round) the same rows measure the paper's locality claim.
+``speedup_vs_vmap`` — the cross-shard frontier's own win.  Every backend
+additionally pins a lockstep *per-round-driver* leg (``walk_fused=False``
+— one kernel launch per frontier round, ``walk="per-round"``); the
+default fused-walk row records ``speedup_vs_perround`` next to its
+``walk_launches=1``, so the single-launch fusion's own win stays visible
+run over run.  In interpret mode the lockstep engine pays the Pallas
+interpreter tax — the rows still pin parity cost; compiled
+(``REPRO_PALLAS_INTERPRET=0`` / ``benchmarks/run.py --compiled``) the
+same rows measure the paper's locality claim for real.
 """
 
 from __future__ import annotations
@@ -60,11 +65,20 @@ def run(initial_size: int, total_ops: int, batches, update_pct: float,
                     "bench": "engine_compare", **vmap_r,
                     "speedup_vs_scalar": round(
                         vmap_r["ops_per_s"] / scalar_r["ops_per_s"], 3)}))
+            perround_r = run_index(name, vals, KEY_MAX, update_pct, batch,
+                                   total_ops, seed=seed, engine="lockstep",
+                                   walk_fused=False, **kw)
+            rows.append(emit({
+                "bench": "engine_compare", **perround_r,
+                "speedup_vs_scalar": round(
+                    perround_r["ops_per_s"] / scalar_r["ops_per_s"], 3)}))
             lock_r = run_index(name, vals, KEY_MAX, update_pct, batch,
                                total_ops, seed=seed, engine="lockstep", **kw)
             row = {"bench": "engine_compare", **lock_r,
                    "speedup_vs_scalar": round(
-                       lock_r["ops_per_s"] / scalar_r["ops_per_s"], 3)}
+                       lock_r["ops_per_s"] / scalar_r["ops_per_s"], 3),
+                   "speedup_vs_perround": round(
+                       lock_r["ops_per_s"] / perround_r["ops_per_s"], 3)}
             if vmap_r is not None:
                 row["speedup_vs_vmap"] = round(
                     lock_r["ops_per_s"] / vmap_r["ops_per_s"], 3)
@@ -78,11 +92,19 @@ def main(quick=True, seed=DEFAULT_SEED, backend=None, engine=None,
     if smoke:
         return run(initial_size=2_000, total_ops=256, batches=(128,),
                    update_pct=2.0, seed=seed, backend=backend or "deltatree")
+    # two legs: the historical 2% mixed point, plus a pure-read point —
+    # the read path is what the engine choice (and the committed
+    # ``engine="auto"`` table, core.engine.AUTO_TABLE) is actually about
     if quick:
-        return run(initial_size=20_000, total_ops=2_000, batches=(256,),
-                   update_pct=2.0, seed=seed, backend=backend)
-    return run(initial_size=200_000, total_ops=20_000, batches=(256, 1024),
-               update_pct=2.0, seed=seed, backend=backend)
+        return (run(initial_size=20_000, total_ops=2_000, batches=(256,),
+                    update_pct=2.0, seed=seed, backend=backend)
+                + run(initial_size=50_000, total_ops=16_000, batches=(256,),
+                      update_pct=0.0, seed=seed, backend=backend))
+    return (run(initial_size=200_000, total_ops=20_000, batches=(256, 1024),
+                update_pct=2.0, seed=seed, backend=backend)
+            + run(initial_size=200_000, total_ops=40_000,
+                  batches=(256, 1024), update_pct=0.0, seed=seed,
+                  backend=backend))
 
 
 if __name__ == "__main__":

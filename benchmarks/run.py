@@ -83,6 +83,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--compiled", action="store_true",
+                    help="force compiled kernels (REPRO_PALLAS_INTERPRET=0 "
+                         "for this process and every benchmark subprocess): "
+                         "Pallas lowered on TPU, the XLA-compiled fused "
+                         "mirrors elsewhere — no interpreter tax. Rows "
+                         "stamp meta interpret=false; run_compiled.sh is "
+                         "the full launch harness around this flag")
     ap.add_argument("--only", default=None,
                     help="fig11|fig12|table1|ub_sweep|serve|serve_trace"
                          "|forest|engines|maint")
@@ -94,6 +101,10 @@ def main() -> None:
                          "need REPRO_TRACE=1 in the environment)")
     add_common_args(ap)
     args, _ = ap.parse_known_args()
+    if args.compiled:
+        # before any kernel-mode resolution or exec_meta stamp; inherited
+        # by the serve/serve_trace x64 subprocesses via their env copy
+        os.environ["REPRO_PALLAS_INTERPRET"] = "0"
     quick = not args.full
     seed, backend, engine = args.seed, args.backend, args.engine
     smoke = args.smoke
@@ -157,7 +168,7 @@ def main() -> None:
                                           smoke=smoke))
     _consolidate(rows, dict(full=args.full, smoke=smoke, seed=seed,
                             backend=backend, engine=engine,
-                            only=args.only))
+                            only=args.only, compiled=args.compiled))
 
 
 if __name__ == '__main__':

@@ -72,13 +72,22 @@ def make_index(backend: str = "deltatree", *, initial=None, payloads=None,
     """Build an Index: ``backend`` picks the registry entry, ``initial``
     (unique keys) and ``payloads`` seed a bulk build (empty when None),
     ``engine`` selects the read-path SearchEngine ("scalar" / "lockstep";
-    validated against the backend's declared ``engines``), ``maintenance``
-    the scheduler policy ("eager" / "deferred" / "budgeted:K"; validated
-    against the backend's declared policy kinds), remaining kwargs go to
-    the backend's config (e.g. ``height=7`` or a prebuilt ``cfg=...``)."""
+    validated against the backend's declared ``engines``; the sentinel
+    ``"auto"`` resolves to the committed bench-table winner for this
+    backend + execution mode first — ``core.engine.resolve_engine``),
+    ``maintenance`` the scheduler policy ("eager" / "deferred" /
+    "budgeted:K"; validated against the backend's declared policy kinds),
+    remaining kwargs go to the backend's config (e.g. ``height=7`` or a
+    prebuilt ``cfg=...``)."""
     from repro.maintenance import parse_policy
 
     spec = get_backend(backend)
+    if engine == "auto":
+        from repro.core.engine import resolve_engine
+
+        engine = resolve_engine(engine, backend)
+        if engine not in supported_engines(backend):
+            engine = "scalar"  # table winner the backend can't run
     if engine is not None:
         engines = supported_engines(backend)
         if engine not in engines:

@@ -81,7 +81,22 @@ class TreeConfig:
                   (Pallas vEB walk kernel in frontier rounds); see
                   ``repro.core.engine``.  The lockstep engine also routes
                   the update path's position-finding through the kernel
-                  (one frontier pass per round).
+                  (one frontier pass per round).  ``make_index`` callers
+                  may pass ``engine="auto"``, which resolves to the
+                  bench-table winner for the backend + execution mode
+                  (``core.engine.resolve_engine``) before this config is
+                  built — a constructed TreeConfig always names a real
+                  registered engine.
+    walk_fused:   lockstep walk driver: True (default) = the fused
+                  single-launch walk (`kernels.ops.delta_walk_fused` —
+                  all rounds inside one kernel/program); False = the
+                  per-round pallas_call-in-while_loop driver (parity
+                  oracle / VMEM-overflow fallback).  Bit-identical
+                  results either way.
+    walk_rounds:  walk round cap; 0 (default) derives it from the arena
+                  geometry at trace time (`kernels.ops.walk_round_cap`)
+                  instead of the historical fixed 64 — see the
+                  ``walk_round_cap`` property.
     maintenance:  maintenance policy string — "eager" (drain to fixpoint
                   inside every update step; the paper/default semantics),
                   "deferred" (maintenance only on ``flush``), or
@@ -104,8 +119,22 @@ class TreeConfig:
     parallel_updates: bool = True   # vectorized non-conflicting fast path
     engine: str = "scalar"    # read-path SearchEngine (core.engine registry)
     maintenance: str = "eager"  # scheduler policy (repro.maintenance)
-    q_tile: int = 0           # lockstep kernel tile (0 = env/default)
+    q_tile: int = 0           # lockstep kernel tile (0 = env/autotune)
     collect_stats: bool = False  # reads return ReadStats (repro.obs)
+    walk_fused: bool = True   # fused single-launch walk driver
+    walk_rounds: int = 0      # walk round cap (0 = derive from geometry)
+
+    @property
+    def walk_round_cap(self) -> int:
+        """Round cap the lockstep walk traces with: the ``walk_rounds``
+        override, else derived from (height, max_dnodes) — tight enough
+        that compiled fused kernels carry no dead iterations, with the
+        structural depth assertion in ``check_invariants`` pinning it."""
+        if self.walk_rounds:
+            return self.walk_rounds
+        from repro.kernels.ops import walk_round_cap
+
+        return walk_round_cap(self.height, self.max_dnodes)
 
     @property
     def maintenance_policy(self):

@@ -135,6 +135,50 @@ def available_engines() -> list[str]:
 
 
 # --------------------------------------------------------------------------
+# "auto" engine resolution — pick the bench-table winner per execution mode
+# --------------------------------------------------------------------------
+
+# Which engine won the committed engine_compare read-path rows, keyed by
+# (backend, compiled).  compiled=True = real XLA/Pallas compilation
+# (REPRO_PALLAS_INTERPRET=0 — on CPU the fused walk runs through the
+# XLA-compiled `ref_delta_walk_fused`); compiled=False = the Pallas
+# interpreter, where lockstep pays the interpreter tax and loses.  Baked
+# from the compiled BENCH_*.json at the repo root (run_compiled.sh +
+# benchmarks/run.py --compiled): forest lockstep beats scalar outright
+# (2-2.6x on the mixed read suite); single-arena deltatree is parity-
+# within-noise on compiled CPU (fused single-launch vs XLA's vmap'd
+# scalar descent) and lockstep takes the tie — it is the paper's read
+# path, runs ONE launch per dispatch (`walk_launches=1` vs the scalar
+# engine's fat gather program), and is the form that lowers to the
+# Pallas kernel on TPU.  Re-bake when new hardware rows land.
+AUTO_TABLE: dict[tuple[str, bool], str] = {
+    ("deltatree", True): "lockstep",
+    ("forest", True): "lockstep",
+}
+
+
+def resolve_engine(name: str | None, backend: str, *,
+                   compiled: bool | None = None) -> str | None:
+    """Resolve ``engine="auto"`` to a concrete registered engine.
+
+    Non-"auto" names (including None) pass through untouched.  "auto"
+    looks up ``AUTO_TABLE[backend, compiled]`` — ``compiled=None`` reads
+    the process execution mode (`ops.default_interpret`) at call time —
+    and falls back to "scalar" (the everywhere-correct reference) on a
+    table miss, so new backends resolve safely.  ``make_index`` calls
+    this before the TreeConfig is built; the resolved name then flows
+    through the normal per-backend engine validation.
+    """
+    if name != "auto":
+        return name
+    if compiled is None:
+        from repro.kernels.ops import default_interpret
+
+        compiled = not default_interpret()
+    return AUTO_TABLE.get((backend, bool(compiled)), "scalar")
+
+
+# --------------------------------------------------------------------------
 # dispatch helpers (the entry points deltatree/forest delegate to)
 # --------------------------------------------------------------------------
 
@@ -276,13 +320,18 @@ def _walk_queries(cfg, keys: jax.Array) -> jax.Array:
 
 def _lockstep_walk(cfg, t, qpacked: jax.Array, root=None):
     """The kernel driver: ``root`` defaults to the tree's root; a (K,)
-    array seeds each query at its own root (fused multi-shard view)."""
+    array seeds each query at its own root (fused multi-shard view).
+    ``cfg.walk_fused`` picks the driver (fused single-launch vs
+    per-round) and ``cfg.walk_round_cap`` the geometry-derived round
+    bound — both default-safe for configs predating the knobs."""
     from repro.kernels import ops as OPS
 
+    cap = getattr(cfg, "walk_round_cap", None) or cfg.max_rounds
     return OPS.delta_walk(t.value, t.child,
                           t.root if root is None else root, qpacked,
-                          height=cfg.height, max_rounds=cfg.max_rounds,
-                          q_tile=cfg.q_tile or None)
+                          height=cfg.height, max_rounds=cap,
+                          q_tile=cfg.q_tile or None,
+                          fused=getattr(cfg, "walk_fused", None))
 
 
 def _lockstep_lookup(cfg, t, keys: jax.Array):

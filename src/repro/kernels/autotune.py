@@ -1,0 +1,138 @@
+"""q_tile autotuner: sweep the lockstep walk tile per tree height, bake
+winners into a height→tile table consulted by ``ops.default_q_tile``.
+
+Resolution order for ``q_tile=None`` walks (see ``ops.default_q_tile``):
+
+1. ``REPRO_PALLAS_QTILE`` env override (process-wide pin, lane-aligned);
+2. the ``REPRO_PALLAS_AUTOTUNE`` cache file — a JSON table written by
+   `save_cache` / ``benchmarks/autotune_qtile.py`` on the machine at hand
+   (keys ``"<height>/<compiled|interpret>/<bits>"``, values tile ints);
+3. the committed ``BAKED`` table below — winners from the repo's recorded
+   compiled sweeps (``benchmarks/autotune_qtile.py`` under
+   ``REPRO_PALLAS_INTERPRET=0``; see the BENCH files at the repo root);
+4. the historical default, 256.
+
+The tile gates two costs: query-batch padding (batches pad up to a
+``q_tile`` multiple, so oversized tiles tax small frontiers) and, on the
+compiled TPU path, the Pallas grid/VMEM shape per cell.  The sweep times
+the *real* driver (`ops.delta_walk_fused` end to end, jit-warm, best of
+``repeats``) so whatever path the current backend resolves to — fused
+Pallas or the XLA mirror — is what gets tuned.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ENV_CACHE = "REPRO_PALLAS_AUTOTUNE"
+
+CANDIDATES = (128, 256, 512, 1024)
+
+# Committed winners: (height, compiled, bits) -> q_tile.  Baked from
+# benchmarks/autotune_qtile.py on the CPU compiled harness
+# (run_compiled.sh — REPRO_PALLAS_INTERPRET=0, jax 0.4.37, batch 1024);
+# re-bake after running the sweep on new hardware — on a TPU the tile
+# also shapes the Pallas grid/VMEM per cell, so TPU winners will differ.
+# Heights absent here fall through to 256.  NB on compiled CPU the tile
+# only gates batch padding (the XLA mirror is tile-free), so these
+# winners sit within run-to-run noise of each other there by design.
+BAKED: dict[tuple[int, bool, int], int] = {
+    (5, True, 32): 1024,
+    (7, True, 32): 256,
+    (9, True, 32): 512,
+    (7, True, 64): 512,
+}
+
+
+def cache_path() -> str | None:
+    """The ``REPRO_PALLAS_AUTOTUNE`` cache file path (None = no cache)."""
+    p = os.environ.get(ENV_CACHE, "").strip()
+    return p or None
+
+
+def _key(height: int, compiled: bool, bits: int) -> str:
+    return f"{height}/{'compiled' if compiled else 'interpret'}/{bits}"
+
+
+def load_cache(path: str | None = None) -> dict[str, int]:
+    """Read the autotune cache (missing/corrupt file = empty table: the
+    autotuner must never make a walk fail)."""
+    path = path or cache_path()
+    if not path or not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        return {str(k): int(v) for k, v in raw.items()}
+    except (json.JSONDecodeError, OSError, TypeError, ValueError):
+        return {}
+
+
+def save_cache(table: dict[str, int], path: str | None = None) -> str | None:
+    """Merge ``table`` into the cache file (existing keys updated).
+    Returns the path written, or None when no cache is configured."""
+    path = path or cache_path()
+    if not path:
+        return None
+    merged = load_cache(path)
+    merged.update({str(k): int(v) for k, v in table.items()})
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1, sort_keys=True)
+    return path
+
+
+def best_q_tile(height: int, *, compiled: bool, bits: int = 32
+                ) -> int | None:
+    """Autotuned tile for ``height`` under the given execution mode, or
+    None when neither the cache nor the baked table knows it."""
+    hit = load_cache().get(_key(height, compiled, bits))
+    if hit is not None:
+        return hit
+    return BAKED.get((height, compiled, bits))
+
+
+def sweep_height(height: int, *, batch: int = 1024, n_keys: int = 50_000,
+                 repeats: int = 3, iters: int = 10,
+                 candidates: tuple[int, ...] = CANDIDATES,
+                 payload_bits: int = 0, seed: int = 0):
+    """Time `ops.delta_walk_fused` per candidate tile on a bulk-built tree.
+
+    Returns ``(best_tile, {tile: seconds-per-iter})`` — per tile: jit
+    warmup off the clock, then ``repeats`` timed runs of ``iters``
+    back-to-back walks (one final block), best repeat kept.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import bulk_build
+    from repro.core.deltatree import TreeConfig
+    from repro.kernels import ops as OPS
+
+    rng = np.random.default_rng(seed)
+    cfg = TreeConfig(height=height, payload_bits=payload_bits,
+                     max_dnodes=max(256, 6 * n_keys // 2 ** (height - 1)))
+    vals = np.unique(rng.integers(1, 4 * n_keys, n_keys).astype(np.int32))
+    t = bulk_build(cfg, vals)
+    q = cfg.qpack(jnp.asarray(
+        rng.integers(1, 4 * n_keys, batch).astype(np.int32)))
+
+    timings: dict[int, float] = {}
+    for tile in candidates:
+        def walk():
+            return OPS.delta_walk_fused(t.value, t.child, t.root, q,
+                                        height=height, q_tile=tile)
+
+        jax.block_until_ready(walk())  # compile off the clock
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = walk()
+            jax.block_until_ready(out)
+            best = min(best, (time.perf_counter() - t0) / iters)
+        timings[tile] = best
+    best_tile = min(timings, key=timings.get)
+    return best_tile, timings

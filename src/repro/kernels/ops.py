@@ -1,14 +1,22 @@
 """jit'd public wrappers around the Pallas kernels.
 
-- `delta_walk`         — multi-round lockstep driver for veb_search: gather
-  each active query's current ΔNode row (one contiguous DMA per query —
-  the paper's "memory transfer"), run the level kernel (one full in-ΔNode
-  descent), hop to the child ΔNode, repeat until every query lands on its
-  leaf.  Reports per-query hop counts (= rounds active = ΔNodes visited)
-  and the folded successor candidate.  ``root`` may be per-query (multi-
-  root seeding over a `veb_search.fuse_arenas` view — the fused forest
-  frontier, DESIGN.md §8).  This is the engine room of the ``"lockstep"``
-  SearchEngine (repro.core.engine).
+- `delta_walk`         — multi-round lockstep walk: every active query
+  descends its current ΔNode fully (one contiguous row DMA — the paper's
+  "memory transfer"), hops to the child ΔNode, repeats until it lands on
+  its leaf.  Reports per-query hop counts (= rounds active = ΔNodes
+  visited) and the folded successor candidate.  ``root`` may be per-query
+  (multi-root seeding over a `veb_search.fuse_arenas` view — the fused
+  forest frontier, DESIGN.md §8).  This is the engine room of the
+  ``"lockstep"`` SearchEngine (repro.core.engine).  Two drivers share the
+  contract bit for bit:
+    * fused (default): ALL rounds inside one launch —
+      `veb_search.veb_walk_fused` (persistent Pallas kernel, arena
+      resident per q_tile grid cell) where Pallas can lower it, else the
+      XLA-compiled `kernels.ref.ref_delta_walk_fused`;
+    * per-round (``fused=False``): the original
+      pallas_call-inside-``lax.while_loop`` — one `veb_walk_rows` launch
+      per frontier round; retained as the parity oracle and the TPU
+      fallback when the arena outgrows the fused kernel's VMEM budget.
 - `delta_search`       — legacy 3-tuple contract on top of `delta_walk`.
 - `delta_contains`     — paper SEARCHNODE set semantics on top (mark bit +
   overflow buffer check).
@@ -16,14 +24,19 @@
 
 Execution-mode resolution (``interpret=None`` everywhere): Pallas compiled
 on TPU, interpret mode elsewhere, overridable per call (``interpret=``) or
-process-wide via ``REPRO_PALLAS_INTERPRET=0/1``.  Packed int64 rows cannot
-lower through the TPU Pallas pipeline, so the compiled path for them is
-``kernels.ref.ref_veb_walk_rows`` — same lockstep rounds, XLA-compiled.
+process-wide via ``REPRO_PALLAS_INTERPRET=0/1``.  Outside interpret mode
+Pallas only lowers on TPU (and never for packed int64 rows), so every
+compiled non-TPU walk routes through the XLA-compiled jnp mirrors
+(`ref_delta_walk_fused` / `ref_veb_walk_rows`) — same round structure,
+same bits, no interpreter tax.  ``max_rounds=None`` derives the round cap
+from the arena geometry at trace time (`walk_round_cap`), so shallow
+trees never carry the historical 64-round bound.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
@@ -31,7 +44,9 @@ import jax.numpy as jnp
 
 from repro.core import layout
 from repro.kernels.delta_paged_attention import paged_decode_attention  # noqa: F401
-from repro.kernels.veb_search import pad_arena, veb_walk_rows, walk_big
+from repro.kernels.veb_search import (
+    pad_arena, veb_walk_fused, veb_walk_rows, walk_big,
+)
 from repro.obs import trace as TR
 
 
@@ -51,6 +66,49 @@ def _resolve_interpret(interpret: bool | None) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
+def default_fused() -> bool:
+    """Walk-driver default: the fused single-launch walk everywhere
+    (bit-identical to the per-round driver; the parity suite pins it).
+    ``REPRO_PALLAS_FUSED=0`` flips the process to the per-round driver —
+    the A/B knob `benchmarks/engine_compare.py` and kernel debugging
+    use."""
+    env = os.environ.get("REPRO_PALLAS_FUSED", "").strip()
+    if env:
+        return env.lower() not in ("0", "false", "no")
+    return True
+
+
+def _resolve_fused(fused: bool | None) -> bool:
+    return default_fused() if fused is None else bool(fused)
+
+
+def walk_round_cap(height: int, max_dnodes: int) -> int:
+    """Trace-time walk round bound derived from the arena geometry,
+    replacing the historical fixed ``max_rounds=64``.
+
+    An arena of M ΔNodes holds at most ``M * 2**(height-1)`` leaves, so a
+    *balanced* ΔNode tree is ``ceil(log2(M * leaf_cap) / (height-1))``
+    ΔNodes deep; maintenance (Rebalance/Expand/Merge) keeps the tree
+    within a constant factor of that, and the cap doubles the balanced
+    depth and adds slack for overflow-chase hops mid-maintenance.  The
+    structural depth assertion in ``check_invariants`` and the
+    never-hit-the-cap test pin the bound; compiled fused kernels size
+    their in-kernel loop with it, so shallow trees stop paying 64 dead
+    iterations of lowered loop body.
+    """
+    leaf_cap = 2 ** (height - 1)
+    balanced = math.ceil(
+        math.log2(max(max_dnodes, 2) * leaf_cap) / max(height - 1, 1))
+    return 2 * balanced + 8
+
+
+def _resolve_max_rounds(max_rounds: int | None, height: int,
+                        max_dnodes: int) -> int:
+    if max_rounds is None:
+        return walk_round_cap(height, max_dnodes)
+    return int(max_rounds)
+
+
 def _check_q_tile(tile: int, origin: str, lane_aligned: bool) -> int:
     """Shared q_tile validation: positive everywhere; the process-wide
     production knob (``REPRO_PALLAS_QTILE``) additionally requires a
@@ -65,32 +123,71 @@ def _check_q_tile(tile: int, origin: str, lane_aligned: bool) -> int:
     return tile
 
 
-def default_q_tile() -> int:
+def default_q_tile(height: int | None = None,
+                   payload_bits: int = 0) -> int:
     """Lockstep kernel query tile: ``REPRO_PALLAS_QTILE`` env override,
-    else 256 (two VREG lanes' worth; the ROADMAP autotuning item sweeps
-    this once TPU timings exist)."""
+    else the autotuned height→tile table (`kernels.autotune` — the
+    ``REPRO_PALLAS_AUTOTUNE`` cache file over the committed baked
+    winners), else 256 (two VREG lanes' worth)."""
     env = os.environ.get("REPRO_PALLAS_QTILE", "").strip()
-    if not env:
-        return 256
-    try:
-        tile = int(env)
-    except ValueError:
-        raise ValueError(
-            f"REPRO_PALLAS_QTILE must be an integer, got {env!r}") from None
-    return _check_q_tile(tile, f"REPRO_PALLAS_QTILE={env!r}",
-                         lane_aligned=True)
+    if env:
+        try:
+            tile = int(env)
+        except ValueError:
+            raise ValueError(
+                f"REPRO_PALLAS_QTILE must be an integer, got {env!r}"
+            ) from None
+        return _check_q_tile(tile, f"REPRO_PALLAS_QTILE={env!r}",
+                             lane_aligned=True)
+    if height is not None:
+        from repro.kernels.autotune import best_q_tile
+
+        tile = best_q_tile(height, compiled=not default_interpret(),
+                           bits=64 if payload_bits else 32)
+        if tile is not None:
+            return _check_q_tile(tile, "autotune table", lane_aligned=False)
+    return 256
 
 
-def _resolve_q_tile(q_tile: int | None) -> int:
+def _resolve_q_tile(q_tile: int | None, height: int | None = None,
+                    payload_bits: int = 0) -> int:
     if q_tile is None:
-        return default_q_tile()
+        return default_q_tile(height, payload_bits)
     return _check_q_tile(q_tile, "explicit q_tile", lane_aligned=False)
+
+
+def _pallas_lowers(dtype, interpret: bool) -> bool:
+    """Whether the Pallas walk kernels can actually run: always in
+    interpret mode; compiled only on TPU and never for packed int64 rows
+    (checked at trace time — compiled non-TPU walks MUST route to the
+    XLA jnp mirrors or pallas_call raises at lowering)."""
+    if interpret:
+        return True
+    return jax.default_backend() == "tpu" and jnp.dtype(dtype) != jnp.int64
+
+
+# Compiled fused kernel budget: the padded arena is resident per grid
+# cell, so it must fit VMEM (~16 MB/core) next to the query tile and the
+# round state.  Conservative by design — past it the per-round driver
+# (streaming row gathers) takes over on TPU.
+FUSED_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _fused_pallas_ok(value_p, child_p, interpret: bool) -> bool:
+    if not _pallas_lowers(value_p.dtype, interpret):
+        return False
+    if interpret:
+        return True
+    arena_bytes = (value_p.size * value_p.dtype.itemsize
+                   + child_p.size * child_p.dtype.itemsize)
+    return arena_bytes <= FUSED_VMEM_BUDGET_BYTES
 
 
 def _row_walk(rows, childrows, queries, *, height, q_tile, interpret):
     """One lockstep round: the Pallas kernel, or its compiled jnp mirror
-    when the kernel cannot lower (int64 packed rows outside interpret)."""
-    if not interpret and rows.dtype == jnp.int64:
+    wherever the kernel cannot lower (any compiled non-TPU backend, and
+    int64 packed rows outside interpret mode)."""
+    if not _pallas_lowers(rows.dtype, interpret):
         from repro.kernels.ref import ref_veb_walk_rows
 
         return ref_veb_walk_rows(rows, childrows, queries, height=height)
@@ -100,7 +197,8 @@ def _row_walk(rows, childrows, queries, *, height, q_tile, interpret):
 
 def delta_walk(value: jax.Array, child: jax.Array, root: jax.Array,
                queries: jax.Array, *, height: int, q_tile: int | None = None,
-               max_rounds: int = 64, interpret: bool | None = None):
+               max_rounds: int | None = None, interpret: bool | None = None,
+               fused: bool | None = None):
     """Multi-hop ΔTree walk in lockstep rounds over the query frontier.
 
     value/child are unpadded arena arrays (value int32, or int64 packed map
@@ -122,7 +220,11 @@ def delta_walk(value: jax.Array, child: jax.Array, root: jax.Array,
     (env/backend changes are honored between calls); callers that trace
     this under an outer jit bake the mode at their own trace time.
     ``q_tile=None`` resolves via `default_q_tile` the same way
-    (``REPRO_PALLAS_QTILE`` env override, else 256).
+    (``REPRO_PALLAS_QTILE`` env override, else the autotuned
+    height→tile table, else 256).  ``fused=None`` resolves via
+    `default_fused` (``REPRO_PALLAS_FUSED`` override, else the fused
+    single-launch driver); ``max_rounds=None`` derives the round cap
+    from the arena geometry (`walk_round_cap`).
 
     Returns per query (batch-padding sliced off):
       leaf_val: packed value at the final position (EMPTY on miss)
@@ -134,11 +236,67 @@ def delta_walk(value: jax.Array, child: jax.Array, root: jax.Array,
                 bound; ``walk_big(dtype)`` = the dtype's ROUTE_LEFT when no
                 left turn happened)
     """
+    TR.bump("delta_walk.dispatch")
+    q_tile = _resolve_q_tile(
+        q_tile, height, 0 if value.dtype == jnp.int32 else 1)
+    max_rounds = _resolve_max_rounds(max_rounds, height, value.shape[0])
+    interpret = _resolve_interpret(interpret)
     with TR.annotate("delta_walk"):
+        if _resolve_fused(fused):
+            return _delta_walk_fused(value, child, root, queries,
+                                     height=height, q_tile=q_tile,
+                                     max_rounds=max_rounds,
+                                     interpret=interpret)
         return _delta_walk(value, child, root, queries, height=height,
-                           q_tile=_resolve_q_tile(q_tile),
-                           max_rounds=max_rounds,
-                           interpret=_resolve_interpret(interpret))
+                           q_tile=q_tile, max_rounds=max_rounds,
+                           interpret=interpret)
+
+
+def delta_walk_fused(value: jax.Array, child: jax.Array, root: jax.Array,
+                     queries: jax.Array, *, height: int,
+                     q_tile: int | None = None,
+                     max_rounds: int | None = None,
+                     interpret: bool | None = None):
+    """`delta_walk` pinned to the fused single-launch driver (ignores the
+    ``REPRO_PALLAS_FUSED`` process default) — the explicit entry point for
+    parity tests and the autotuner."""
+    return delta_walk(value, child, root, queries, height=height,
+                      q_tile=q_tile, max_rounds=max_rounds,
+                      interpret=interpret, fused=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("height", "q_tile", "max_rounds", "interpret")
+)
+def _delta_walk_fused(value, child, root, queries, *, height, q_tile,
+                      max_rounds, interpret: bool):
+    """Fused driver: every walk round inside ONE launch.
+
+    Pallas persistent kernel where it lowers (interpret mode anywhere;
+    compiled on TPU for int32 arenas within the VMEM budget), else the
+    XLA-compiled blind-descent mirror `ref_delta_walk_fused` — the
+    compiled non-TPU (and int64 / oversized-arena) fused path.  Both are
+    bit-identical to the per-round driver, per-query ``hops`` included.
+    """
+    queries = queries.astype(value.dtype)
+    k = queries.shape[0]
+    dn0 = jnp.broadcast_to(jnp.asarray(root, jnp.int32), (k,))
+    value_p, child_p = pad_arena(value, child)
+    if not _fused_pallas_ok(value_p, child_p, interpret):
+        from repro.kernels.ref import ref_delta_walk_fused
+
+        # big-sentinel lanes are born resolved inside the mirror; no
+        # q_tile padding — XLA has no tile-shape constraint to satisfy
+        return ref_delta_walk_fused(value, child, dn0, queries,
+                                    height=height, max_rounds=max_rounds)
+    kp = (k + q_tile - 1) // q_tile * q_tile
+    qpad = jnp.pad(queries, (0, kp - k),
+                   constant_values=walk_big(value.dtype))
+    dnpad = jnp.pad(dn0, (0, kp - k))
+    out = veb_walk_fused(value_p, child_p, dnpad, qpad, height=height,
+                         q_tile=q_tile, max_rounds=max_rounds,
+                         interpret=interpret)
+    return tuple(o[:k] for o in out)
 
 
 @functools.partial(
@@ -205,14 +363,16 @@ def _delta_walk(value, child, root, queries, *, height, q_tile, max_rounds,
 
 def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
                  queries: jax.Array, *, height: int, q_tile: int | None = None,
-                 max_rounds: int = 64, interpret: bool | None = None):
+                 max_rounds: int | None = None,
+                 interpret: bool | None = None, fused: bool | None = None):
     """Legacy 3-tuple walk: (leaf_val, leaf_b, final_dn) per query (same
     contract as `kernels.ref.ref_delta_search`); ``interpret=None`` /
-    ``q_tile=None`` = auto-resolved at call time like `delta_walk`."""
+    ``q_tile=None`` / ``max_rounds=None`` / ``fused=None`` = auto-resolved
+    at call time like `delta_walk`."""
     lv, lb, dn, _, _ = delta_walk(
         value, child, root, queries,
         height=height, q_tile=q_tile, max_rounds=max_rounds,
-        interpret=interpret,
+        interpret=interpret, fused=fused,
     )
     return lv, lb, dn
 
@@ -220,24 +380,30 @@ def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
 def delta_contains(value: jax.Array, mark: jax.Array, child: jax.Array,
                    buf: jax.Array, root: jax.Array, queries: jax.Array, *,
                    height: int, q_tile: int | None = None,
-                   max_rounds: int = 64, interpret: bool | None = None):
+                   max_rounds: int | None = None,
+                   interpret: bool | None = None, fused: bool | None = None):
     """Paper SEARCHNODE on top of the kernel walk: leaf match & ~mark, else
     the ΔNode's overflow buffer (paper Fig. 8 lines 9..17)."""
-    return _delta_contains(value, mark, child, buf, root, queries,
-                           height=height, q_tile=_resolve_q_tile(q_tile),
-                           max_rounds=max_rounds,
-                           interpret=_resolve_interpret(interpret))
+    return _delta_contains(
+        value, mark, child, buf, root, queries, height=height,
+        q_tile=_resolve_q_tile(
+            q_tile, height, 0 if value.dtype == jnp.int32 else 1),
+        max_rounds=_resolve_max_rounds(max_rounds, height, value.shape[0]),
+        interpret=_resolve_interpret(interpret),
+        fused=_resolve_fused(fused))
 
 
 @functools.partial(
-    jax.jit, static_argnames=("height", "q_tile", "max_rounds", "interpret")
+    jax.jit,
+    static_argnames=("height", "q_tile", "max_rounds", "interpret", "fused")
 )
 def _delta_contains(value, mark, child, buf, root, queries, *, height,
-                    q_tile, max_rounds, interpret: bool):
+                    q_tile, max_rounds, interpret: bool, fused: bool):
     pos = jnp.asarray(layout.veb_pos_table(height))
     lv, lb, dn = delta_search(
         value, child, root, queries,
-        height=height, q_tile=q_tile, max_rounds=max_rounds, interpret=interpret,
+        height=height, q_tile=q_tile, max_rounds=max_rounds,
+        interpret=interpret, fused=fused,
     )
     leaf_hit = lv == queries
     leaf_live = leaf_hit & ~mark[dn, pos[lb]]

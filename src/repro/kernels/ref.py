@@ -53,6 +53,101 @@ def ref_veb_walk_rows(rows: jax.Array, childrows: jax.Array,
     return leaf_val, b, nxt, cand
 
 
+@functools.partial(jax.jit, static_argnames=("height", "max_rounds"))
+def ref_delta_walk_fused(value: jax.Array, child: jax.Array, root: jax.Array,
+                         queries: jax.Array, *, height: int,
+                         max_rounds: int):
+    """Fused multi-round walk, XLA-compiled: the whole frontier loop in one
+    program (contract of ``ops.delta_walk`` — (leaf_val, leaf_b, final_dn,
+    hops, cand) per query, ``root`` scalar or per-query (K,) seeds, and a
+    query equal to ``walk_big(dtype)`` born resolved).
+
+    This is both the allclose oracle for ``veb_search.veb_walk_fused`` and
+    the *compiled* fused walk wherever Pallas cannot lower (non-TPU
+    backends, int64 packed rows, arenas past the VMEM budget) — the CPU
+    compiled-performance path runs here.
+
+    The in-ΔNode descent is *blind*: one router gather per level (instead
+    of router + left-child), always routing right through EMPTY territory.
+    Sound because occupied slots form a connected top tree (I1/I2: an
+    EMPTY slot has no occupied descendants) and packed queries are >= 1 >
+    EMPTY, so once the walk leaves the occupied region it only ever sees
+    EMPTY routers and the last-occupied position it tracks *is* the leaf
+    the eager walk stops at.  The successor candidate is reconstructed
+    post-descent: the occupied positions visited above the leaf are
+    exactly the internal ancestors, so folding their routers under
+    ``v < router`` reproduces the per-level left-turn fold bit for bit.
+    """
+    from repro.kernels.veb_search import walk_big
+
+    h = height
+    bottom0 = 2 ** (h - 1)
+    m, ub = value.shape
+    pos = jnp.asarray(layout.veb_pos_table(h))
+    big = jnp.asarray(walk_big(value.dtype), value.dtype)
+    queries = queries.astype(value.dtype)
+    k = queries.shape[0]
+    vflat = value.reshape(-1)
+    dn0 = jnp.broadcast_to(jnp.asarray(root, jnp.int32), (k,))
+
+    state = dict(
+        dn=dn0,
+        resolved=queries == big,
+        leaf_val=jnp.zeros((k,), value.dtype),
+        leaf_b=jnp.ones((k,), jnp.int32),
+        final_dn=dn0,
+        hops=jnp.zeros((k,), jnp.int32),
+        cand=jnp.full((k,), big, value.dtype),
+        rounds=jnp.int32(0),
+    )
+
+    def cond(s):
+        return jnp.any(~s["resolved"]) & (s["rounds"] < max_rounds)
+
+    def body(s):
+        dnc = jnp.clip(s["dn"], 0, m - 1)
+        base = dnc * ub
+        v = queries
+        b = jnp.ones((k,), jnp.int32)
+        lb = jnp.ones((k,), jnp.int32)          # last occupied position
+        lv = jnp.zeros((k,), value.dtype)
+        routers, bs = [], []
+        for _ in range(h):                       # blind descent: h gathers
+            router = vflat.at[base + pos[b]].get(mode="promise_in_bounds")
+            routers.append(router)
+            bs.append(b)
+            occ = router != EMPTY
+            lb = jnp.where(occ, b, lb)
+            lv = jnp.where(occ, router, lv)
+            go_right = v >= router               # EMPTY always routes right
+            b = jnp.where(b < bottom0, 2 * b + go_right.astype(b.dtype), b)
+        # post-hoc candidate fold: occupied non-leaf positions on the path
+        # are the internal ancestors; v < router there means a left turn
+        cand = jnp.full((k,), big, value.dtype)
+        for router, bi in zip(routers, bs):
+            fold = (router != EMPTY) & (bi != lb) & (v < router) & (router < cand)
+            cand = jnp.where(fold, router, cand)
+        at_bottom = lb >= bottom0
+        slot = jnp.where(at_bottom, lb - bottom0, 0)
+        ch = child.at[dnc, slot].get(mode="promise_in_bounds")
+        nxt = jnp.where(at_bottom, ch, jnp.int32(-1))
+        act = ~s["resolved"]
+        done_now = act & (nxt < 0)
+        return dict(
+            dn=jnp.where(act & (nxt >= 0), nxt, s["dn"]),
+            resolved=s["resolved"] | done_now,
+            leaf_val=jnp.where(done_now, lv, s["leaf_val"]),
+            leaf_b=jnp.where(done_now, lb, s["leaf_b"]),
+            final_dn=jnp.where(done_now, s["dn"], s["final_dn"]),
+            hops=s["hops"] + act.astype(jnp.int32),
+            cand=jnp.where(act & (cand < s["cand"]), cand, s["cand"]),
+            rounds=s["rounds"] + 1,
+        )
+
+    s = jax.lax.while_loop(cond, body, state)
+    return (s["leaf_val"], s["leaf_b"], s["final_dn"], s["hops"], s["cand"])
+
+
 @functools.partial(jax.jit, static_argnames=("height",))
 def ref_delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
                      queries: jax.Array, *, height: int):

@@ -137,6 +137,145 @@ def veb_walk_rows(rows: jax.Array, childrows: jax.Array, queries: jax.Array,
     )(pos, queries, rows, childrows)
 
 
+def _fused_kernel(height: int, big: int, max_rounds: int, m: int,
+                  pos_ref, q_ref, root_ref, value_ref, child_ref,
+                  leaf_val_ref, leaf_b_ref, final_dn_ref, hops_ref, cand_ref):
+    """Persistent multi-round walk: the whole frontier loop of
+    ``ops.delta_walk`` inside one kernel launch (per q_tile grid cell).
+
+    The padded arena is resident (VMEM on TPU — the caller budgets it);
+    each round is a *blind* in-ΔNode descent — one router gather per
+    level, always routing right through EMPTY territory (sound by the
+    connected-top-tree occupancy invariants; see
+    ``ref.ref_delta_walk_fused``, the bit-exact oracle) — followed by the
+    bottom-slot child hop.  Rounds stop when every lane is resolved, so
+    shallow trees never pay dead iterations.
+    """
+    h = height
+    bottom0 = 2 ** (h - 1)
+    pos = pos_ref[...]
+    v = q_ref[...]                                        # (QT,)
+    vflat = value_ref[...].reshape(-1)                    # (M * UBp,)
+    cflat = child_ref[...].reshape(-1)                    # (M * CP,)
+    ub = value_ref.shape[1]
+    cp = child_ref.shape[1]
+    dn0 = root_ref[...]
+
+    def cond(s):
+        return jnp.any(~s[1]) & (s[7] < max_rounds)
+
+    def body(s):
+        dn, resolved, leaf_val, leaf_b, final_dn, hops, cand, rounds = s
+        dnc = jnp.clip(dn, 0, m - 1)
+        base = dnc * ub
+        b = jnp.ones(v.shape, jnp.int32)
+        lb = jnp.ones(v.shape, jnp.int32)          # last occupied position
+        lv = jnp.zeros(v.shape, vflat.dtype)
+        rcand = jnp.full(v.shape, big, vflat.dtype)
+        routers, bs = [], []
+        for _ in range(h):                          # blind descent
+            router = jnp.take(vflat, base + pos[b])
+            routers.append(router)
+            bs.append(b)
+            occ = router != EMPTY
+            lb = jnp.where(occ, b, lb)
+            lv = jnp.where(occ, router, lv)
+            go_right = v >= router
+            b = jnp.where(b < bottom0, 2 * b + go_right.astype(b.dtype), b)
+        for router, bi in zip(routers, bs):         # post-hoc cand fold
+            fold = ((router != EMPTY) & (bi != lb) & (v < router)
+                    & (router < rcand))
+            rcand = jnp.where(fold, router, rcand)
+        at_bottom = lb >= bottom0
+        slot = jnp.where(at_bottom, lb - bottom0, 0)
+        ch = jnp.take(cflat, dnc * cp + slot)
+        nxt = jnp.where(at_bottom, ch, jnp.int32(-1))
+        act = ~resolved
+        done_now = act & (nxt < 0)
+        return (
+            jnp.where(act & (nxt >= 0), nxt, dn),
+            resolved | done_now,
+            jnp.where(done_now, lv, leaf_val),
+            jnp.where(done_now, lb, leaf_b),
+            jnp.where(done_now, dn, final_dn),
+            hops + act.astype(jnp.int32),
+            jnp.where(act & (rcand < cand), rcand, cand),
+            rounds + 1,
+        )
+
+    bigv = jnp.asarray(big, vflat.dtype)
+    init = (
+        dn0,
+        v == bigv,                                  # sentinel lanes resolved
+        jnp.zeros(v.shape, vflat.dtype),
+        jnp.ones(v.shape, jnp.int32),
+        dn0,
+        jnp.zeros(v.shape, jnp.int32),
+        jnp.full(v.shape, big, vflat.dtype),
+        jnp.int32(0),
+    )
+    s = jax.lax.while_loop(cond, body, init)
+    leaf_val_ref[...] = s[2]
+    leaf_b_ref[...] = s[3]
+    final_dn_ref[...] = s[4]
+    hops_ref[...] = s[5]
+    cand_ref[...] = s[6]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("height", "q_tile", "max_rounds",
+                                    "interpret"))
+def veb_walk_fused(value_p: jax.Array, child_p: jax.Array, roots: jax.Array,
+                   queries: jax.Array, *, height: int, q_tile: int = 256,
+                   max_rounds: int = 16, interpret: bool = True):
+    """All walk rounds in one launch (grid over query tiles).
+
+    value_p:  (M, UBp) padded arena rows (`pad_arena`), int32/int64
+    child_p:  (M, CP)  padded bottom-slot child ids (-1 none)
+    roots:    (K,)     int32 per-query frontier seeds
+    queries:  (K,)     packed, same dtype as value_p; K % q_tile == 0
+
+    Returns the full `ops.delta_walk` 5-tuple (leaf_val, leaf_b, final_dn,
+    hops, cand), each (K,).  Sentinel queries (``walk_big``) are born
+    resolved.  The whole arena is mapped into every grid cell — callers
+    gate this path on the VMEM budget (`ops` falls back to the per-round
+    driver / the compiled jnp mirror when it doesn't fit).
+    """
+    k = queries.shape[0]
+    assert k % q_tile == 0, (k, q_tile)
+    assert queries.dtype == value_p.dtype, (queries.dtype, value_p.dtype)
+    n_tiles = k // q_tile
+    m, ubp = value_p.shape
+    cp = child_p.shape[1]
+    big = walk_big(value_p.dtype)
+
+    pos = jnp.asarray(layout.veb_pos_table(height))
+    posp = _round_up(pos.shape[0], 128)
+    pos = jnp.pad(pos, (0, posp - pos.shape[0]))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((k,), value_p.dtype),   # leaf_val
+        jax.ShapeDtypeStruct((k,), jnp.int32),       # leaf_b
+        jax.ShapeDtypeStruct((k,), jnp.int32),       # final_dn
+        jax.ShapeDtypeStruct((k,), jnp.int32),       # hops
+        jax.ShapeDtypeStruct((k,), value_p.dtype),   # cand
+    ]
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, height, big, max_rounds, m),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((posp,), lambda i: (0,)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((m, ubp), lambda i: (0, 0)),
+            pl.BlockSpec((m, cp), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((q_tile,), lambda i: (i,))] * 5,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pos, queries, roots, value_p, child_p)
+
+
 def pad_arena(value: jax.Array, child: jax.Array):
     """Pad arena rows to 128-lane multiples for the kernel."""
     ubp = _round_up(value.shape[1], 128)

@@ -31,9 +31,9 @@ import sys
 # Row fields that identify *what* was measured (matched in the diff) —
 # everything else is either a measurement or an execution-mode stamp.
 ID_KEYS = [
-    "suite", "bench", "backend", "engine", "dispatch", "maintenance",
-    "update_pct", "batch", "ub", "height", "shards", "devices", "q_tile",
-    "flush_every", "initial_keys", "seed", "skipped",
+    "suite", "bench", "backend", "engine", "dispatch", "walk",
+    "maintenance", "update_pct", "batch", "ub", "height", "shards",
+    "devices", "q_tile", "flush_every", "initial_keys", "seed", "skipped",
 ]
 
 # Execution-mode stamps (obs PR): describe the machine, not the workload.
@@ -44,7 +44,7 @@ LOWER_BETTER = {
     "seconds", "compile_seconds", "paged_step_us", "dense_step_us",
     "p50_us", "p99_us", "loads", "blocks_b16", "blocks_b128",
     "hops", "hops_mean", "hops_max", "hops_per_search", "rounds",
-    "inline_maint", "admit_wait", "queue_hwm",
+    "inline_maint", "admit_wait", "queue_hwm", "walk_launches",
 }
 
 # Primary metric per row, first present wins (name, higher_is_better).

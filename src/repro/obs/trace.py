@@ -28,6 +28,15 @@ import jax
 
 ENV = "REPRO_TRACE"
 
+# Host-side span counters (``REPRO_TRACE`` gated like the spans): every
+# entered span/annotate/bump increments its name.  A span opened at trace
+# time counts traces, one opened per call counts dispatches — which is the
+# point: `bump("delta_walk.dispatch")` in `ops.delta_walk` is the
+# kernel-dispatch counter behind the benchmarks' ``walk_launches`` column
+# (the per-ROUND launch count is device data — the driver's round counter
+# — because while_loop iterations never re-enter the host).
+_COUNTS: dict[str, int] = {}
+
 
 def enabled() -> bool:
     """True when ``REPRO_TRACE`` asks for spans (read at call time)."""
@@ -35,11 +44,27 @@ def enabled() -> bool:
     return bool(env) and env.lower() not in ("0", "false", "no")
 
 
+def bump(name: str, n: int = 1) -> None:
+    """Count an event under ``name`` (no-op unless ``REPRO_TRACE``)."""
+    if enabled():
+        _COUNTS[name] = _COUNTS.get(name, 0) + n
+
+
+def counters() -> dict[str, int]:
+    """Snapshot of the span/event counters accumulated so far."""
+    return dict(_COUNTS)
+
+
+def reset_counters() -> None:
+    _COUNTS.clear()
+
+
 def annotate(name: str):
     """Device-side scope: names the ops traced under it in HLO/xprof.
     Safe anywhere (host or trace time); nullcontext when disabled."""
     if not enabled():
         return contextlib.nullcontext()
+    bump(name)
     return jax.named_scope(name)
 
 
@@ -47,6 +72,7 @@ def span(name: str):
     """Host wall-clock span + device scope; nullcontext when disabled."""
     if not enabled():
         return contextlib.nullcontext()
+    bump(name)
     stack = contextlib.ExitStack()
     stack.enter_context(jax.profiler.TraceAnnotation(name))
     stack.enter_context(jax.named_scope(name))

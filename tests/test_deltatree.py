@@ -61,6 +61,23 @@ def check_invariants(cfg: TreeConfig, t, require_empty_buffers=True) -> None:
                     count_live += 1
         assert count_live == nlive[dn], ("nlive", dn, count_live, nlive[dn])
 
+    # Walk-cap safety: the fused walk kernel caps its in-kernel loop at
+    # cfg.walk_round_cap rounds (one ΔNode hop per round), so the deepest
+    # alive ΔNode must sit strictly under the cap — otherwise the kernel
+    # would truncate a descent and return a wrong leaf silently.
+    depth: dict[int, int] = {}
+
+    def _depth(dn: int) -> int:
+        if dn not in depth:
+            p = int(parent[dn])
+            depth[dn] = 1 if p < 0 else _depth(p) + 1
+        return depth[dn]
+
+    max_depth = max((_depth(dn) for dn in range(cfg.max_dnodes)
+                     if alive[dn]), default=0)
+    cap = cfg.walk_round_cap
+    assert max_depth < cap, ("walk cap", max_depth, cap)
+
 
 @pytest.mark.parametrize("height,nsteps", [(3, 15), (4, 20), (7, 12)])
 def test_random_ops_vs_oracle(height, nsteps):

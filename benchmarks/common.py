@@ -177,6 +177,12 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
     (`STATS_BACKENDS`) collect ``repro.obs`` read telemetry by default
     (merged device-side across the counted loop; one host sync at the
     end), giving every perf row its hop / round / router columns."""
+    from repro.obs import trace as OT
+
+    # one row = one measurement: REPRO_TRACE span counters must not leak
+    # across rows in a sweep (the chrome-trace event ring keeps the
+    # whole run's timeline and is left alone)
+    OT.reset_counters()
     if backend in STATS_BACKENDS:
         make_kw.setdefault("collect_stats", True)
     ix = make_index(backend, initial=initial, engine=engine,
@@ -238,30 +244,36 @@ def run_index(backend: str, initial: np.ndarray, key_hi: int,
     # Blocked and timed separately (``compile_seconds``) so no async
     # warmup work leaks into the steady-state clock.
     tc = time.perf_counter()
-    for _ in range(2):
-        ix, found = one_step(ix)
-    if flush_every:  # warm the flush compile too, off the clock
-        ix, _ = ix.flush()
-    jax.block_until_ready(
-        [x for x in jax.tree.leaves(ix.state) if hasattr(x, "block_until_ready")])
-    found.block_until_ready()
+    # host-side spans (nullcontext unless REPRO_TRACE): the warmup and
+    # steady-state loops are the rows of the --trace-dir chrome timeline
+    with OT.span(f"bench.{backend}.compile"):
+        for _ in range(2):
+            ix, found = one_step(ix)
+        if flush_every:  # warm the flush compile too, off the clock
+            ix, _ = ix.flush()
+        jax.block_until_ready(
+            [x for x in jax.tree.leaves(ix.state)
+             if hasattr(x, "block_until_ready")])
+        found.block_until_ready()
     compile_seconds = time.perf_counter() - tc
     n_search = n_update = 0
 
     steps = max(total_ops // batch, 1)
     t0 = time.perf_counter()
-    for step in range(steps):
-        ix, found = one_step(ix, count=True)
-        if flush_every and (step + 1) % flush_every == 0:
+    with OT.span(f"bench.{backend}.steady"):
+        for step in range(steps):
+            ix, found = one_step(ix, count=True)
+            if flush_every and (step + 1) % flush_every == 0:
+                ix, _ = ix.flush()
+        if flush_every:
+            # drain the trailing window on the clock — otherwise short
+            # sweeps (steps < flush_every) would time non-eager policies
+            # with zero structural work and flatter them vs eager
             ix, _ = ix.flush()
-    if flush_every:
-        # drain the trailing window on the clock — otherwise short sweeps
-        # (steps < flush_every) would time non-eager policies with zero
-        # structural work and flatter them vs eager
-        ix, _ = ix.flush()
-    jax.block_until_ready(
-        [x for x in jax.tree.leaves(ix.state) if hasattr(x, "block_until_ready")])
-    found.block_until_ready()
+        jax.block_until_ready(
+            [x for x in jax.tree.leaves(ix.state)
+             if hasattr(x, "block_until_ready")])
+        found.block_until_ready()
     dt = time.perf_counter() - t0
     row = {"backend": backend, "engine": ix.engine,
            "dispatch": dispatch_of(ix),

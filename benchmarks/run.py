@@ -131,6 +131,11 @@ def main() -> None:
     if args.trace_dir:
         from repro.obs import trace as OT
 
+        # asking for a trace dir IS the span opt-in: turn REPRO_TRACE on
+        # for this process and every benchmark subprocess so the chrome-
+        # trace timeline below has events even off-TPU (where the xprof
+        # capture may have little to sample)
+        os.environ.setdefault(OT.ENV, "1")
         cm = OT.capture(args.trace_dir)
     else:
         import contextlib
@@ -166,6 +171,13 @@ def main() -> None:
                                           backend=backend, engine=engine,
                                           maintenance=args.maintenance,
                                           smoke=smoke))
+    if args.trace_dir:
+        from repro.obs import trace as OT
+
+        path = os.path.join(args.trace_dir, "chrome_trace.json")
+        n = OT.write_chrome_trace(path)
+        print(f"# chrome trace: {n} span events -> {path} "
+              "(chrome://tracing or ui.perfetto.dev)", flush=True)
     _consolidate(rows, dict(full=args.full, smoke=smoke, seed=seed,
                             backend=backend, engine=engine,
                             only=args.only, compiled=args.compiled))

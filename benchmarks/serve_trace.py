@@ -103,6 +103,8 @@ def _run_sched(tag: str, cfg, params, pc, plans, max_live: int,
                queue_hwm=obs["queue_hwm"], admitted=obs["admitted"],
                admit_wait=obs["admit_wait"], combined=obs["combined"],
                view_hits=obs["view_hits"], view_builds=obs["view_builds"],
+               probe_queries=obs["probe_queries"],
+               probe_hits=obs["probe_hits"],
                worker_drains=w["drains"], worker_rounds=w["rounds"])
     return row
 

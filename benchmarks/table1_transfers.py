@@ -33,13 +33,31 @@ def _mean_loads(touch_fn, keys) -> float:
 
 
 def _profile(label: str, ix, q, seed: int) -> dict:
+    from repro.obs import trace as OT
+
+    with OT.span(f"table1.{label}"):
+        return _profile_row(label, ix, q, seed)
+
+
+def _profile_row(label: str, ix, q, seed: int) -> dict:
     tf = ix.touch_fn()
     assert tf is not None, f"backend {ix.backend!r} exposes no touch trace"
-    return {"bench": "table1", "backend": label, "engine": ix.engine,
-            "seed": seed,
-            "loads": round(_mean_loads(tf, q), 2),
-            "blocks_b16": round(count_block_transfers(tf, q, 16), 2),
-            "blocks_b128": round(count_block_transfers(tf, q, 128), 2)}
+    row = {"bench": "table1", "backend": label, "engine": ix.engine,
+           "seed": seed,
+           "loads": round(_mean_loads(tf, q), 2),
+           "blocks_b16": round(count_block_transfers(tf, q, 16), 2),
+           "blocks_b128": round(count_block_transfers(tf, q, 128), 2)}
+    if ix.backend == "deltatree":
+        # measured (device-side descent replay) vs analytical model at
+        # B=16: the quiescent-tree contract is ratio == 1.0 exactly —
+        # the compiled-smoke CI job asserts it on every committed row
+        from repro.obs.transfers import compare_model
+
+        cm = compare_model(ix.cfg, ix.state, q, block_sizes=(16,))[16]
+        row.update(measured_transfers=round(cm["measured"], 2),
+                   model_transfers=round(cm["model"], 2),
+                   transfer_ratio=round(cm["ratio"], 4))
+    return row
 
 
 def run(n_queries: int = 300, initial_size: int = INITIAL,

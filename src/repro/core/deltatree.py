@@ -109,6 +109,15 @@ class TreeConfig:
                   ``ReadStats`` counter pytree.  Static, so the disabled
                   path traces exactly the pre-obs graph — byte-identical
                   lowered HLO (asserted by tests/test_obs.py).
+    collect_transfers: sub-gate under ``collect_stats``: additionally
+                  derive measured ideal-cache ``TransferStats``
+                  (``repro.obs.transfers`` — distinct ΔNode visits and
+                  distinct B-block touches per read batch) into
+                  ``ReadStats.transfers``.  Separate knob because the
+                  device-side descent replay costs real work per batch;
+                  off (None leg) it adds nothing to the collect_stats
+                  graph, and with collect_stats off the whole read path
+                  still lowers byte-identical to the pre-obs graph.
     """
 
     height: int = 7           # UB = 127, the paper's best (page-sized) ΔNode
@@ -121,6 +130,7 @@ class TreeConfig:
     maintenance: str = "eager"  # scheduler policy (repro.maintenance)
     q_tile: int = 0           # lockstep kernel tile (0 = env/autotune)
     collect_stats: bool = False  # reads return ReadStats (repro.obs)
+    collect_transfers: bool = False  # + measured TransferStats sub-gate
     walk_fused: bool = True   # fused single-launch walk driver
     walk_rounds: int = 0      # walk round cap (0 = derive from geometry)
 

@@ -191,17 +191,33 @@ def collecting(cfg) -> bool:
     return bool(getattr(cfg, "collect_stats", False))
 
 
+def collecting_transfers(cfg) -> bool:
+    """Static sub-gate for measured ``TransferStats`` (the device-side
+    descent replay): only active when ``collect_stats`` already is, so
+    the collect_stats=False HLO-identity contract is untouched and the
+    replay's extra work is opt-in per config."""
+    return collecting(cfg) and bool(getattr(cfg, "collect_transfers", False))
+
+
 def _read_stats(cfg, t, keys, found, hops):
     """The trailing ``ReadStats`` of a stats-collecting read, derived
     from the dispatch's own outputs: both engines produce bit-identical
     (found, hops) columns (the conformance contract), so the histogram /
-    occupancy / buffer-hit parity between engines is structural."""
+    occupancy / buffer-hit parity between engines is structural.  The
+    measured-transfer leg replays the descent from (arena, root, keys)
+    alone — engine-independent by construction for the same reason."""
     from repro.obs.stats import ReadStats, SearchStats
 
     keys32 = jnp.asarray(keys, jnp.int32)
     pad = keys32 == layout.ROUTE_LEFT
     bhit = found & DT.buffered_member(cfg, t, keys32)
-    return ReadStats(search=SearchStats.of(hops, pad, bhit))
+    transfers = None
+    if collecting_transfers(cfg):
+        from repro.obs import transfers as OTR
+
+        transfers = OTR.measure(cfg, t, keys32)
+    return ReadStats(search=SearchStats.of(hops, pad, bhit),
+                     transfers=transfers)
 
 
 def lookup_cols(cfg, t, keys: jax.Array):

@@ -307,9 +307,21 @@ def _forest_read_stats(fcfg: ForestConfig, f: Forest, raw, keys, sid,
         f.trees)  # (S, K) buffered membership; pick each lane's owner shard
     bhit = found & member[sid, jnp.arange(keys.shape[0])]
     clamped = jnp.sum((raw != keys.astype(raw.dtype)).astype(jnp.int32))
+    transfers = None
+    if E.collecting_transfers(fcfg.tree):
+        from repro.obs import transfers as OTR
+
+        # shard-local replay from (stacked arenas, owner sid, keys): both
+        # dispatch paths hand this the same sid values (fused computes
+        # shard_ids, vmap reuses the route's), so fused/vmap transfer
+        # parity is structural like the search leg above
+        transfers = OTR.measure_stacked(
+            fcfg.tree, f.trees.value, f.trees.child, f.trees.root[sid],
+            sid, keys)
     return ReadStats(
         search=SearchStats.of(hops, pad, bhit),
         router=RouterStats.of(R.lane_counts(sid, fcfg.num_shards), clamped),
+        transfers=transfers,
     )
 
 

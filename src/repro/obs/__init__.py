@@ -16,19 +16,35 @@ Three kinds of instrument, all zero-cost when off:
   ``REPRO_TRACE`` env var, plus an xprof trace-dump helper
   (``obs.trace.capture``) for the compiled-performance campaign.
 - **Benchmark reports** (`obs.report`): a stdlib-only CLI that renders
-  consolidated ``BENCH_*.json`` files as per-suite tables and *diffs*
-  them against a baseline file (speedup deltas, regression flags)::
+  consolidated ``BENCH_*.json`` files as per-suite tables, *diffs* them
+  against a baseline file (speedup deltas, regression flags), and
+  renders per-suite ``--history`` trajectories across many files::
 
       python -m repro.obs.report BENCH_NEW.json --diff BENCH_OLD.json
+      python -m repro.obs.report BENCH_*.json --history
+
+Two more instruments complete the transfer-accounting loop
+(DESIGN.md §14):
+
+- **Measured transfers** (`obs.transfers`): a device-side replay of the
+  descent deriving ``TransferStats`` — distinct ΔNode visits and
+  distinct B-block touches per read batch — equal on a quiescent tree
+  to the analytical `core.baselines.count_block_transfers` *exactly*,
+  gated by ``TreeConfig.collect_transfers`` under ``collect_stats``.
+- **Metrics export** (`obs.export`): stats pytrees → one named snapshot
+  → Prometheus text exposition / JSON (``ServeScheduler.metrics()`` is
+  the live producer), plus `obs.trace.write_chrome_trace` for a
+  perfetto-compatible span timeline.
 """
 
-from repro.obs import report, stats, trace
+from repro.obs import export, report, stats, trace, transfers
 from repro.obs.stats import (
     MaintenanceStats,
     ReadStats,
     RouterStats,
     SearchStats,
     ServeStats,
+    TransferStats,
 )
 
 __all__ = [
@@ -37,7 +53,10 @@ __all__ = [
     "RouterStats",
     "SearchStats",
     "ServeStats",
+    "TransferStats",
+    "export",
     "report",
     "stats",
     "trace",
+    "transfers",
 ]

@@ -73,7 +73,7 @@ def _fmt(v) -> str:
 
 def _table(rows: list[dict], cols: list[str]) -> list[str]:
     cells = [[_fmt(r.get(c)) for c in cols] for r in rows]
-    widths = [max(len(c), *(len(row[i]) for row in cells))
+    widths = [max([len(c)] + [len(row[i]) for row in cells])
               for i, c in enumerate(cols)]
     out = ["  ".join(c.ljust(w) for c, w in zip(cols, widths)).rstrip()]
     out.append("  ".join("-" * w for w in widths))
@@ -120,6 +120,56 @@ def render(bench: dict, title: str = "") -> list[str]:
 
 
 # ---------------------------------------------------------------- diff ---
+
+
+def _row_label(r: dict) -> str:
+    return " ".join(
+        _fmt(r[k]) for k in ("bench", "backend", "engine", "dispatch",
+                             "maintenance", "update_pct", "batch", "ub",
+                             "height", "shards")
+        if r.get(k) is not None) or "(row)"
+
+
+def _primary_one(row: dict):
+    for name, _higher in PRIMARY:
+        v = row.get(name)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            return name, float(v)
+    return None
+
+
+def history(benches: list[dict]) -> list[str]:
+    """Per-suite trajectory tables across many BENCH files: one row per
+    measured identity, one column per timestamp, cells the row's primary
+    metric — the at-a-glance perf record across committed artifacts."""
+    benches = sorted(benches, key=lambda b: str(b.get("timestamp", "?")))
+    stamps: list[str] = []
+    for b in benches:
+        ts = str(b.get("timestamp", "?"))
+        while ts in stamps:  # duplicate stamps still get a column each
+            ts += "'"
+        stamps.append(ts)
+    suites: dict[str, dict[str, dict]] = {}
+    for b, ts in zip(benches, stamps):
+        for suite, rows in by_suite(b.get("rows", [])).items():
+            per = suites.setdefault(suite, {})
+            for r in rows:
+                p = _primary_one(r)
+                if p is None:
+                    continue
+                name, v = p
+                cell = per.setdefault(_row_label(r), {"metric": name})
+                cell[ts] = v
+    lines = [f"# history across {len(benches)} files"]
+    for suite in sorted(suites):
+        table = [{"row": label, **cells}
+                 for label, cells in sorted(suites[suite].items())]
+        if not table:  # no row in the suite carried a primary metric
+            continue
+        lines.append("")
+        lines.append(f"## {suite} ({len(table)} rows)")
+        lines.extend(_table(table, ["row", "metric"] + stamps))
+    return lines
 
 
 def _match(new_row: dict, base_rows: list[dict]) -> dict | None:
@@ -187,9 +237,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.obs.report",
         description="render / diff consolidated BENCH_*.json files")
-    ap.add_argument("bench", help="BENCH_*.json to render")
+    ap.add_argument("bench", nargs="+",
+                    help="BENCH_*.json to render (several with --history)")
     ap.add_argument("--diff", default=None, metavar="BASE",
                     help="baseline BENCH_*.json to diff against")
+    ap.add_argument("--history", action="store_true",
+                    help="render a per-suite trajectory table across all "
+                         "given files (primary metric per timestamp)")
     ap.add_argument("--threshold", type=float, default=0.9,
                     help="speedup below this flags a regression (0.9)")
     ap.add_argument("--out", default=None,
@@ -198,8 +252,17 @@ def main(argv=None) -> int:
                     help="exit 1 when any pair regresses past --threshold")
     args = ap.parse_args(argv)
 
-    new = load(args.bench)
-    lines = render(new, title=f"bench report: {args.bench}")
+    if args.history:
+        text = "\n".join(history([load(p) for p in args.bench])) + "\n"
+        sys.stdout.write(text)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text)
+        return 0
+    if len(args.bench) > 1:
+        ap.error("multiple BENCH files need --history")
+    new = load(args.bench[0])
+    lines = render(new, title=f"bench report: {args.bench[0]}")
     regressions = []
     if args.diff:
         base = load(args.diff)

@@ -34,6 +34,7 @@ import numpy as np
 HOP_BINS = 16          # SearchStats histogram bins (hops clip to the last)
 OCC_ROUNDS = 16        # SearchStats per-round occupancy window
 LATENCY_RESERVOIR = 512  # ServeStats ring-buffer capacity (decode steps)
+TRANSFER_BLOCK_SIZES = (8, 16, 32, 64)  # TransferStats block-size sweep (B)
 
 
 class MaintenanceStats(NamedTuple):
@@ -244,15 +245,95 @@ class RouterStats(NamedTuple):
         }
 
 
+class TransferStats(NamedTuple):
+    """Measured memory transfers of one read batch in the ideal-cache
+    model (the paper's O(log_B N) claim, Table 1 / Lemma 2.1).
+
+    Derived in the dispatch layers by replaying the walk's per-level
+    gather indices device-side (`repro.obs.transfers`) — the replay
+    depends only on (arena, roots, keys), never on which engine or
+    dispatch produced the result, so cross-engine bit-parity is
+    structural like ``SearchStats``.  ``blocks[i]`` is the batch total of
+    *distinct* ``TRANSFER_BLOCK_SIZES[i]``-element blocks touched per
+    query (what `core.baselines.count_block_transfers` counts, exactly);
+    ``buffer_probes`` (SEARCHNODE's branchless overflow-buffer row read,
+    one per resolved real query) is kept out of the block counts — the
+    analytical model excludes it too.
+    """
+
+    queries: jax.Array         # () int32 — lanes in the batch (pads included)
+    pad_lanes: jax.Array       # () int32 — born-resolved ROUTE_LEFT lanes
+    dnode_visits: jax.Array    # () int32 — distinct ΔNodes entered (batch sum)
+    router_touches: jax.Array  # () int32 — element reads steering the walk
+    leaf_touches: jax.Array    # () int32 — terminal leaf-test reads
+    buffer_probes: jax.Array   # () int32 — SEARCHNODE buffer-row probes
+    blocks: jax.Array          # (len(TRANSFER_BLOCK_SIZES),) int32 totals
+    batches: jax.Array         # () int32 — batches folded in
+
+    @classmethod
+    def zero(cls) -> "TransferStats":
+        z = jnp.int32(0)
+        return cls(queries=z, pad_lanes=z, dnode_visits=z, router_touches=z,
+                   leaf_touches=z, buffer_probes=z,
+                   blocks=jnp.zeros((len(TRANSFER_BLOCK_SIZES),), jnp.int32),
+                   batches=z)
+
+    @classmethod
+    def of(cls, pad: jax.Array, visits: jax.Array, router: jax.Array,
+           leaf: jax.Array, blocks: jax.Array) -> "TransferStats":
+        """Derive the batch's stats from per-query columns: ``pad[K]``
+        bool, ``visits[K]`` / ``router[K]`` / ``leaf[K]`` int32 counts,
+        and ``blocks[K, len(TRANSFER_BLOCK_SIZES)]`` distinct-block
+        counts (all already zero on pad lanes — `obs.transfers`)."""
+        real = jnp.sum(~pad, dtype=jnp.int32)
+        return cls(
+            queries=jnp.int32(pad.shape[0]),
+            pad_lanes=jnp.sum(pad, dtype=jnp.int32),
+            dnode_visits=jnp.sum(visits, dtype=jnp.int32),
+            router_touches=jnp.sum(router, dtype=jnp.int32),
+            leaf_touches=jnp.sum(leaf, dtype=jnp.int32),
+            buffer_probes=real,
+            blocks=jnp.sum(blocks, axis=0, dtype=jnp.int32),
+            batches=jnp.int32(1),
+        )
+
+    @classmethod
+    def reduce(cls, stacked: "TransferStats") -> "TransferStats":
+        """Aggregate stacked (S,) legs: transfers are all work-like —
+        everything sums (concurrent shards still move every block)."""
+        return cls(*(jnp.sum(x, axis=0) for x in stacked))
+
+    def merge(self, other: "TransferStats") -> "TransferStats":
+        return TransferStats(*(a + b for a, b in zip(self, other)))
+
+    def asdict(self) -> dict:
+        real = max(int(self.queries) - int(self.pad_lanes), 1)
+        out = {
+            "queries": int(self.queries),
+            "pad_lanes": int(self.pad_lanes),
+            "dnode_visits": int(self.dnode_visits),
+            "router_touches": int(self.router_touches),
+            "leaf_touches": int(self.leaf_touches),
+            "buffer_probes": int(self.buffer_probes),
+            "batches": int(self.batches),
+            "visits_mean": round(int(self.dnode_visits) / real, 3),
+        }
+        for i, b in enumerate(TRANSFER_BLOCK_SIZES):
+            out[f"blocks_b{b}"] = int(self.blocks[i])
+            out[f"blocks_b{b}_mean"] = round(int(self.blocks[i]) / real, 3)
+        return out
+
+
 class ReadStats(NamedTuple):
     """What a stats-collecting read returns as its trailing element:
     the batch's ``SearchStats`` plus, on the forest dispatch, the
-    router's ``RouterStats`` (``None`` on single-arena reads — a None
-    pytree leaf flattens to nothing, so the jitted entry points stay
-    shape-static either way)."""
+    router's ``RouterStats``, plus — under the ``collect_transfers``
+    sub-gate — the measured ``TransferStats`` (``None`` legs flatten to
+    nothing, so the jitted entry points stay shape-static either way)."""
 
     search: SearchStats
     router: RouterStats | None = None
+    transfers: TransferStats | None = None
 
 
 class ServeStats(NamedTuple):
@@ -275,6 +356,8 @@ class ServeStats(NamedTuple):
     combined: jax.Array     # () int32 — ops eliminated by op-combining
     view_hits: jax.Array    # () int32 — fused-view cache hits observed
     view_builds: jax.Array  # () int32 — fused-view cache builds observed
+    probe_queries: jax.Array  # () int32 — read-service probe lookups issued
+    probe_hits: jax.Array     # () int32 — probes that resolved a mapping
     lat_us: jax.Array       # (LATENCY_RESERVOIR,) float32 — step latencies
 
     @classmethod
@@ -282,7 +365,7 @@ class ServeStats(NamedTuple):
         z = jnp.int32(0)
         return cls(steps=z, flushes=z, pending_hwm=z, queue_hwm=z,
                    admitted=z, admit_wait=z, combined=z, view_hits=z,
-                   view_builds=z,
+                   view_builds=z, probe_queries=z, probe_hits=z,
                    lat_us=jnp.zeros((LATENCY_RESERVOIR,), jnp.float32))
 
     def record(self, seconds, *, pending: int = 0, flushed: bool = False,
@@ -302,8 +385,17 @@ class ServeStats(NamedTuple):
             combined=self.combined + jnp.int32(combined),
             view_hits=self.view_hits + jnp.int32(view_hits),
             view_builds=self.view_builds + jnp.int32(view_builds),
+            probe_queries=self.probe_queries,
+            probe_hits=self.probe_hits,
             lat_us=self.lat_us.at[idx].set(jnp.float32(seconds) * 1e6),
         )
+
+    def record_probe(self, queries: int, hits: int) -> "ServeStats":
+        """Fold one read-service ``probe`` call in (between decode steps
+        — bumps no step counter and writes no latency sample)."""
+        return self._replace(
+            probe_queries=self.probe_queries + jnp.int32(queries),
+            probe_hits=self.probe_hits + jnp.int32(hits))
 
     @classmethod
     def reduce(cls, stacked: "ServeStats") -> "ServeStats":
@@ -318,6 +410,8 @@ class ServeStats(NamedTuple):
                    combined=jnp.sum(stacked.combined),
                    view_hits=jnp.sum(stacked.view_hits),
                    view_builds=jnp.sum(stacked.view_builds),
+                   probe_queries=jnp.sum(stacked.probe_queries),
+                   probe_hits=jnp.sum(stacked.probe_hits),
                    lat_us=stacked.lat_us.reshape(-1))
 
     def valid_latencies(self) -> np.ndarray:
@@ -340,6 +434,8 @@ class ServeStats(NamedTuple):
                "admit_wait": int(self.admit_wait),
                "combined": int(self.combined),
                "view_hits": int(self.view_hits),
-               "view_builds": int(self.view_builds)}
+               "view_builds": int(self.view_builds),
+               "probe_queries": int(self.probe_queries),
+               "probe_hits": int(self.probe_hits)}
         out.update(self.percentiles())
         return out

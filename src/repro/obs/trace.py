@@ -6,7 +6,9 @@ an unannotated build).  With ``REPRO_TRACE=1``:
 
 - ``span(name)`` opens a host-side ``jax.profiler.TraceAnnotation`` *and*
   a device-side ``jax.named_scope`` — use it around host-driven sections
-  (engine dispatch, a ServeEngine decode step).
+  (engine dispatch, a ServeEngine decode step).  Each completed span
+  additionally records a host wall-clock event for the Chrome-trace
+  writer below.
 - ``annotate(name)`` opens only the ``named_scope`` — use it *inside*
   traced functions (``delta_walk`` rounds, maintenance phases, the router
   dispatch), where a host annotation would stamp trace time, not run time.
@@ -16,13 +18,24 @@ an unannotated build).  With ``REPRO_TRACE=1``:
   ``stop_trace`` — the xprof/perfetto trace-dump hook the ROADMAP's
   compiled-performance campaign points at a device run (also reachable as
   ``benchmarks/run.py --trace-dir``).
+- ``write_chrome_trace(path)`` dumps the recorded span events as a
+  Chrome-trace / perfetto JSON timeline (``{"traceEvents": [...]}``) —
+  host wall-clock only, so ``--trace-dir`` emits a browsable timeline
+  even where ``jax.profiler`` has no device backend to sample.
+
+Counters and the event ring are guarded by one module lock: the serve
+layer's maintenance worker is headed for its own thread (ROADMAP), and
+dict item updates from two threads would otherwise drop bumps.
 """
 
 from __future__ import annotations
 
 import contextlib
 import functools
+import json
 import os
+import threading
+import time
 
 import jax
 
@@ -36,6 +49,14 @@ ENV = "REPRO_TRACE"
 # (the per-ROUND launch count is device data — the driver's round counter
 # — because while_loop iterations never re-enter the host).
 _COUNTS: dict[str, int] = {}
+# Completed host-side span events for `write_chrome_trace`, bounded so a
+# long benchmark loop can't grow without limit (drops count under the
+# reserved name below instead of silently vanishing).
+_EVENTS: list[dict] = []
+_EVENT_CAP = 200_000
+_DROPPED = "trace.events_dropped"
+_LOCK = threading.Lock()
+_EPOCH = time.perf_counter()
 
 
 def enabled() -> bool:
@@ -47,16 +68,60 @@ def enabled() -> bool:
 def bump(name: str, n: int = 1) -> None:
     """Count an event under ``name`` (no-op unless ``REPRO_TRACE``)."""
     if enabled():
-        _COUNTS[name] = _COUNTS.get(name, 0) + n
+        with _LOCK:
+            _COUNTS[name] = _COUNTS.get(name, 0) + n
 
 
 def counters() -> dict[str, int]:
     """Snapshot of the span/event counters accumulated so far."""
-    return dict(_COUNTS)
+    with _LOCK:
+        return dict(_COUNTS)
 
 
 def reset_counters() -> None:
-    _COUNTS.clear()
+    """Clear the counters — callers that reuse one process for many
+    measurement rows (``benchmarks/common.run_index``) reset between
+    rows so counts like ``walk_launches`` can't leak across.  The
+    chrome-trace event ring is deliberately untouched: a ``--trace-dir``
+    run wants the whole run's timeline (``reset_events`` exists for
+    callers that do want it cleared)."""
+    with _LOCK:
+        _COUNTS.clear()
+
+
+def reset_events() -> None:
+    with _LOCK:
+        _EVENTS.clear()
+
+
+def _record_event(name: str, t0: float, t1: float) -> None:
+    ev = {"name": name, "ph": "X", "pid": os.getpid(),
+          "tid": threading.get_ident(),
+          "ts": round((t0 - _EPOCH) * 1e6, 3),
+          "dur": round((t1 - t0) * 1e6, 3)}
+    with _LOCK:
+        if len(_EVENTS) < _EVENT_CAP:
+            _EVENTS.append(ev)
+        else:
+            _COUNTS[_DROPPED] = _COUNTS.get(_DROPPED, 0) + 1
+
+
+def events() -> list[dict]:
+    """Snapshot of the recorded Chrome-trace span events."""
+    with _LOCK:
+        return [dict(e) for e in _EVENTS]
+
+
+def write_chrome_trace(path: str) -> int:
+    """Write the recorded span events as Chrome-trace JSON (open in
+    ``chrome://tracing`` or https://ui.perfetto.dev).  Returns the event
+    count written.  Unconditional like ``capture`` — asking for the file
+    is the opt-in — but only spans entered under ``REPRO_TRACE=1``
+    recorded anything."""
+    evs = events()
+    with open(path, "w") as f:
+        json.dump({"traceEvents": evs, "displayTimeUnit": "ms"}, f)
+    return len(evs)
 
 
 def annotate(name: str):
@@ -68,15 +133,24 @@ def annotate(name: str):
     return jax.named_scope(name)
 
 
+@contextlib.contextmanager
+def _timed_span(name: str):
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(jax.profiler.TraceAnnotation(name))
+        stack.enter_context(jax.named_scope(name))
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            _record_event(name, t0, time.perf_counter())
+
+
 def span(name: str):
     """Host wall-clock span + device scope; nullcontext when disabled."""
     if not enabled():
         return contextlib.nullcontext()
     bump(name)
-    stack = contextlib.ExitStack()
-    stack.enter_context(jax.profiler.TraceAnnotation(name))
-    stack.enter_context(jax.named_scope(name))
-    return stack
+    return _timed_span(name)
 
 
 def traced(name: str):

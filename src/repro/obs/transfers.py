@@ -1,0 +1,197 @@
+"""Measured memory-transfer accounting (the O(log_B N) loop, closed).
+
+`core.transfers.delta_touch_fn` is the *analytical* side of the paper's
+Table 1: a host-side replay of the descent that yields the flat element
+indices an ideal cache would fetch.  This module is the *measured* side:
+the same replay, written as a fixed-length ``lax.scan`` over the arena
+pytree, so the dispatch layers (``core.engine``, ``distributed.forest``)
+can derive a ``TransferStats`` counter pytree device-side from exactly
+the inputs the walk consumed — (arena, roots, sid, keys) — under jit,
+inside someone else's trace, for every engine and dispatch.
+
+Because the replay never looks at which engine produced the read result,
+cross-engine × cross-dispatch bit-parity is structural, the same argument
+``SearchStats`` makes.  And because it appends exactly the indices the
+host model appends (node read each micro-step; the leaf-test read only
+when the left child is non-EMPTY; the terminating leaf-test read *not*
+counted; SEARCHNODE's buffer probe kept out of block counting), the
+measured distinct-block counts on a quiescent tree equal
+`core.baselines.count_block_transfers` **exactly** — tier-1 tested.
+
+Address space: per-shard flat indices ``dn * UB + vEB-position`` (the
+model's ``stride = cfg.ub`` unpadded layout).  ROUTE_LEFT pad lanes are
+born resolved and contribute zero touches, zero visits, zero blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.stats import TRANSFER_BLOCK_SIZES, TransferStats
+
+# sorts after every real flat index; np (not jnp) so the lazy first
+# import inside someone's jit trace can't mint a leaked tracer constant
+_SENTINEL = np.int32(2**31 - 1)
+
+
+def _replay(cfg, value, child, roots, sid, keys):
+    """Replay each query's descent over stacked arenas.
+
+    value (S, M, UB) packed, child (S, M, leaf_cap), roots[K] shard-local
+    start ΔNodes, sid[K] owner-shard ids, keys[K] int32.  Returns
+    (idx (K, 2T) int32 touched flat indices, SENTINEL-padded;
+     visits[K], router[K], leaf[K] int32 per-query counts).
+    """
+    from repro.core import layout
+
+    pos = jnp.asarray(layout.veb_pos_table(cfg.height))
+    bottom0, stride = cfg.bottom0, cfg.ub
+    steps = int(getattr(cfg, "walk_round_cap", None) or cfg.max_rounds)
+    steps *= cfg.height  # ≤ height micro-steps per ΔNode visit
+    keys = jnp.asarray(keys, jnp.int32)
+    q = cfg.qpack(keys)
+    sid = jnp.asarray(sid, jnp.int32)
+    active0 = keys != layout.ROUTE_LEFT
+    zero = jnp.zeros(keys.shape, jnp.int32)
+
+    def body(s, _):
+        dn, b, active, visits, router_t, leaf_t = s
+        pos_b = pos[b]
+        node = value[sid, dn, pos_b]
+        at_bottom = b >= bottom0
+        slot = jnp.where(at_bottom, b - bottom0, 0)
+        ch = jnp.where(at_bottom, child[sid, dn, slot], jnp.int32(-1))
+        hop = at_bottom & (ch >= 0)
+        lpos = pos[jnp.minimum(2 * b, 2 * bottom0 - 1)]
+        left_val = jnp.where(at_bottom, jnp.zeros((), value.dtype),
+                             value[sid, dn, lpos])
+        internal = (~at_bottom) & (left_val != layout.EMPTY)
+        terminal = active & ~internal & ~hop
+        idx1 = jnp.where(active, dn * stride + pos_b, _SENTINEL)
+        idx2 = jnp.where(active & internal, dn * stride + lpos, _SENTINEL)
+        b_next = jnp.where(internal,
+                           2 * b + (q >= node).astype(jnp.int32), b)
+        b_next = jnp.where(hop, jnp.int32(1), b_next)
+        dn_next = jnp.where(hop, ch, dn)
+        s = (dn_next, b_next, active & ~terminal,
+             visits + (active & hop).astype(jnp.int32),
+             router_t + active.astype(jnp.int32)
+             + (active & internal).astype(jnp.int32),
+             leaf_t + terminal.astype(jnp.int32))
+        return s, (idx1, idx2)
+
+    init = (jnp.asarray(roots, jnp.int32),
+            jnp.ones(keys.shape, jnp.int32),  # b=1; pos[0] is the -1 hole
+            active0, active0.astype(jnp.int32), zero, zero)
+    (_, _, _, visits, router_t, leaf_t), (i1, i2) = jax.lax.scan(
+        body, init, None, length=steps)
+    idx = jnp.concatenate([i1, i2], axis=0).T  # (K, 2T)
+    # every touch is counted once in router_t; the terminal read is the
+    # leaf test that resolves the query — split it out of the router count
+    return idx, visits, router_t - leaf_t, leaf_t
+
+
+def _distinct_blocks(sorted_idx, block: int):
+    """Per-query distinct ``block``-element blocks among the valid
+    (non-SENTINEL) entries of an ascending-sorted (K, T) index array —
+    exactly what `count_block_transfers` totals per key."""
+    valid = sorted_idx < _SENTINEL
+    bid = sorted_idx // jnp.int32(block)
+    first = jnp.concatenate(
+        [jnp.ones_like(valid[:, :1]), bid[:, 1:] != bid[:, :-1]], axis=1)
+    return jnp.sum(valid & first, axis=1, dtype=jnp.int32)
+
+
+def measure_stacked(cfg, value, child, roots, sid, keys) -> TransferStats:
+    """``TransferStats`` for one read batch over stacked (S, M, ...)
+    arenas (the forest's owner-shard view; S=1 for a single arena)."""
+    idx, visits, router_t, leaf_t = _replay(cfg, value, child, roots, sid,
+                                            keys)
+    sidx = jnp.sort(idx, axis=1)
+    blocks = jnp.stack([_distinct_blocks(sidx, b)
+                        for b in TRANSFER_BLOCK_SIZES], axis=1)
+    pad = jnp.asarray(keys, jnp.int32) == _SENTINEL  # ROUTE_LEFT == int32max
+    return TransferStats.of(pad, visits, router_t, leaf_t, blocks)
+
+
+def measure(cfg, t, keys) -> TransferStats:
+    """``TransferStats`` for one read batch on a single arena ``t``
+    (jit-safe; this is what `engine._read_stats` threads through)."""
+    keys = jnp.asarray(keys, jnp.int32)
+    roots = jnp.broadcast_to(jnp.asarray(t.root, jnp.int32), keys.shape)
+    return measure_stacked(cfg, t.value[None], t.child[None], roots,
+                           jnp.zeros(keys.shape, jnp.int32), keys)
+
+
+# ------------------------------------------------------------ validation ---
+
+
+def compare_model(cfg, t, keys, block_sizes=TRANSFER_BLOCK_SIZES) -> dict:
+    """Measured-vs-analytical distinct-block transfers on one tree.
+
+    Returns ``{B: {"measured", "model", "ratio"}}``.  On a quiescent
+    (flushed) tree the two sides count the identical index multiset, so
+    ``ratio == 1.0`` exactly for every B — the tier-1 / compiled-smoke
+    acceptance gate.  Host-side helper: don't call it inside a trace.
+    """
+    from repro.core import transfers as CT
+    from repro.core.baselines import count_block_transfers
+
+    keys = np.asarray(keys)
+    ts = measure(cfg, t, keys)
+    touch = CT.delta_touch_fn(cfg, t)
+    out = {}
+    for b in block_sizes:
+        i = TRANSFER_BLOCK_SIZES.index(b)
+        measured = int(ts.blocks[i]) / max(len(keys), 1)
+        model = count_block_transfers(touch, keys, b)
+        out[int(b)] = {"measured": measured, "model": model,
+                       "ratio": measured / model if model else 0.0}
+    return out
+
+
+def fit_log_b(n_points: int = 11, *, block: int = 16, height: int = 4,
+              start: int = 128, factor: int = 2, queries: int = 512,
+              seed: int = 0) -> dict:
+    """Fit measured mean block transfers against c·log_B N + d across a
+    geometric sweep of quiescent tree sizes.
+
+    Builds ``n_points`` bulk trees of N = start·factor^i unique keys,
+    measures the mean distinct ``block``-element blocks per search over
+    ``queries`` random probes, and least-squares fits the means against
+    log_B N.  Returns {"block", "points": [(n, measured)], "c", "d",
+    "r2"} — r2 ≥ 0.98 is the tier-1 O(log_B N) acceptance gate.  The
+    default sweep doubles N (factor=2): mean ΔNode depth grows in
+    plateaus, so coarse geometric steps alias the staircase and tank the
+    fit; doubling samples it densely enough that the linear trend
+    dominates (r2 ≈ 0.992-0.994 across seeds).
+    """
+    from repro.core import deltatree as DT
+    from repro.core import layout
+
+    i = TRANSFER_BLOCK_SIZES.index(block)
+    rng = np.random.default_rng(seed)
+    points = []
+    for p in range(n_points):
+        n = start * factor**p
+        keys = np.unique(rng.integers(
+            layout.KEY_MIN, layout.KEY_MAX, size=n).astype(np.int32))
+        cfg = DT.TreeConfig(
+            height=height,
+            max_dnodes=max(256, 6 * len(keys) // 2 ** (height - 1)))
+        t = DT.bulk_build(cfg, keys)
+        probes = rng.integers(layout.KEY_MIN, layout.KEY_MAX,
+                              size=queries).astype(np.int32)
+        ts = measure(cfg, t, jnp.asarray(probes))
+        points.append((len(keys), int(ts.blocks[i]) / queries))
+    x = np.log(np.asarray([n for n, _ in points], np.float64)) / np.log(block)
+    y = np.asarray([m for _, m in points], np.float64)
+    c, d = np.polyfit(x, y, 1)
+    pred = c * x + d
+    ss_res = float(np.sum((y - pred) ** 2))
+    ss_tot = float(np.sum((y - y.mean()) ** 2))
+    r2 = 1.0 - ss_res / ss_tot if ss_tot else 1.0
+    return {"block": int(block), "points": points, "c": float(c),
+            "d": float(d), "r2": float(r2)}

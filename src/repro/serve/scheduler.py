@@ -282,7 +282,43 @@ class ServeScheduler:
             found, pages, hops = self.pager._lookup(uniq)
         self.pager.stats["searches"] += len(uniq)
         self.pager.stats["hops"] += int(np.asarray(hops).sum())
-        return np.where(np.asarray(found), np.asarray(pages), -1)[inverse]
+        out = np.where(np.asarray(found), np.asarray(pages), -1)[inverse]
+        # probe reads previously bypassed ServeStats entirely; count the
+        # caller-visible traffic (pre-dedupe refs, resolved mappings)
+        self.obs = self.obs.record_probe(len(seq_ids),
+                                         int((out >= 0).sum()))
+        return out
+
+    # ---------------------------------------------------------- metrics ---
+
+    def metrics(self, fmt: str = "dict"):
+        """Point-in-time metrics snapshot across every stats source the
+        scheduler touches: the decode loop's ``ServeStats``, the
+        maintenance worker's drain counters, the pager's host-side op
+        counters, the read path's last ``ReadStats`` legs (search /
+        router / measured transfers — present when the underlying index
+        was built with ``collect_stats``), and any ``REPRO_TRACE`` span
+        counters.  ``fmt``: "dict" (nested plain dict), "prometheus"
+        (text exposition), or "json"."""
+        from repro.obs import export as OX
+
+        rs = self.pager.last_read_stats
+        tr = OT.counters()
+        snap = OX.snapshot(
+            serve=self.obs,
+            maintenance=self.worker.stats(),
+            pager=self.pager.stats,
+            search=rs.search if rs is not None else None,
+            router=rs.router if rs is not None else None,
+            transfers=rs.transfers if rs is not None else None,
+            trace=tr or None,
+        )
+        if fmt == "prometheus":
+            return OX.to_prometheus(snap)
+        if fmt == "json":
+            return OX.to_json(snap)
+        assert fmt == "dict", f"unknown metrics fmt {fmt!r}"
+        return snap
 
     # ------------------------------------------------------------ trace ---
 

@@ -125,6 +125,9 @@ class DeltaPager:
         self.stats = {"searches": 0, "inserts": 0, "deletes": 0, "hops": 0,
                       "flushes": 0, "maint_rebuilds": 0, "maint_expands": 0,
                       "maint_merges": 0, "combined": 0, "inline_maint": 0}
+        # most recent ReadStats from a stats-collecting index (None when
+        # the index doesn't collect) — the metrics-export snapshot source
+        self.last_read_stats = None
 
     # ---- key encoding (overridden by ShardedDeltaPager) ----
     def _key(self, seq_id, block) -> np.ndarray:
@@ -134,8 +137,11 @@ class DeltaPager:
     # ---- index protocol ----
     def _lookup(self, keys: np.ndarray):
         """(found, payload, hops) for a key batch (wait-free lookup).
-        Tolerates a stats-collecting index (trailing ReadStats dropped)."""
+        Tolerates a stats-collecting index (the trailing ReadStats is
+        kept as ``last_read_stats`` for metrics export, not returned)."""
         out = self.index.lookup(jnp.asarray(keys))
+        if len(out) > 3:
+            self.last_read_stats = out[3]
         return out[0], out[1], out[2]
 
     def _update(self, kinds: np.ndarray, keys: np.ndarray,

@@ -338,6 +338,69 @@ def test_trace_gating(monkeypatch):
     assert not trace.enabled()
 
 
+def test_trace_span_events_and_chrome_trace(tmp_path, monkeypatch):
+    monkeypatch.setenv(trace.ENV, "1")
+    trace.reset_counters()
+    trace.reset_events()
+    with trace.span("obs-evt"):
+        pass
+    with trace.span("obs-evt"):
+        pass
+    evs = trace.events()
+    assert len(evs) == 2
+    assert all(e["name"] == "obs-evt" and e["ph"] == "X" and
+               e["dur"] >= 0 for e in evs)
+    # counters reset keeps the event ring (whole-run --trace-dir
+    # timelines survive per-row counter resets); reset_events clears it
+    assert trace.counters()["obs-evt"] == 2
+    trace.reset_counters()
+    assert trace.counters() == {}
+    assert len(trace.events()) == 2
+
+    path = tmp_path / "chrome_trace.json"
+    n = trace.write_chrome_trace(str(path))
+    assert n == 2
+    doc = json.loads(path.read_text())
+    assert [e["name"] for e in doc["traceEvents"]] == ["obs-evt", "obs-evt"]
+
+    trace.reset_events()
+    assert trace.events() == []
+
+
+def test_trace_counters_thread_safe(monkeypatch):
+    """Concurrent bumps from many threads must not drop counts (the
+    module lock satellite: dict updates raced before)."""
+    import threading
+
+    monkeypatch.setenv(trace.ENV, "1")
+    trace.reset_counters()
+    N, T = 2000, 8
+
+    def work():
+        for _ in range(N):
+            trace.bump("obs-race")
+
+    threads = [threading.Thread(target=work) for _ in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert trace.counters()["obs-race"] == N * T
+    trace.reset_counters()
+
+
+def test_run_index_resets_counters_between_rows(monkeypatch):
+    """benchmarks.common.run_index resets the span counters per row so
+    columns like walk_launches can't leak across measurement rows."""
+    monkeypatch.setenv(trace.ENV, "1")
+    trace.bump("leaked.counter", 41)
+    from benchmarks.common import run_index
+
+    run_index("sorted_array", KEYS, key_hi=500, update_pct=0.0,
+              batch=8, total_ops=16)
+    assert "leaked.counter" not in trace.counters()
+
+
 def test_trace_capture_smoke(tmp_path):
     try:
         out = trace.trace_run(
@@ -391,6 +454,39 @@ def test_report_render_and_diff(tmp_path, capsys):
     assert rc == 0
 
 
+def test_report_history(tmp_path, capsys):
+    """--history renders one column per BENCH file, rows matched by
+    identity label, cells the primary metric (missing files -> '-')."""
+    b0 = _bench({"deltatree": 1000.0, "sorted_array": 900.0}, "t0")
+    b1 = _bench({"deltatree": 1500.0}, "t1")
+    p0, p1 = tmp_path / "b0.json", tmp_path / "b1.json"
+    p0.write_text(json.dumps(b0))
+    p1.write_text(json.dumps(b1))
+
+    lines = report.history([b1, b0])          # order-insensitive (sorted)
+    text = "\n".join(lines)
+    assert "# history across 2 files" in text
+    assert "t0" in text and "t1" in text
+    row = next(ln for ln in lines if "deltatree" in ln)
+    assert "1000" in row and "1500" in row
+    row = next(ln for ln in lines if "sorted_array" in ln)
+    assert "900" in row and row.rstrip().endswith("-")  # absent at t1
+
+    # duplicate timestamps still get one column each
+    lines = report.history([b0, dict(b0)])
+    assert any("t0'" in ln for ln in lines)
+
+    out_md = tmp_path / "hist.md"
+    rc = report.main([str(p0), str(p1), "--history", "--out", str(out_md)])
+    assert rc == 0
+    assert "# history across 2 files" in out_md.read_text()
+    capsys.readouterr()
+
+    with pytest.raises(SystemExit):           # many files need --history
+        report.main([str(p0), str(p1)])
+    capsys.readouterr()
+
+
 def test_report_tolerant_matching(tmp_path):
     """A key missing on either side is a wildcard; ambiguity unmatches."""
     new = _bench({"deltatree": 500.0}, extra={"flush_every": 0})
@@ -402,3 +498,62 @@ def test_report_tolerant_matching(tmp_path):
              "rows": base["rows"] + [dict(base["rows"][0])]}
     lines, regs = report.diff(new, base2)
     assert regs == [] and any("1 unmatched" in ln for ln in lines)
+
+
+# ---------------------------------------------------------------- export ---
+
+
+def test_export_snapshot_prometheus_json():
+    from repro.obs import export
+
+    s = SearchStats.of(jnp.asarray([0, 1, 2, 2], jnp.int32),
+                       jnp.zeros(4, bool), jnp.zeros(4, bool))
+    snap = export.snapshot(search=s, pager={"searches": 7, "hops": 3.5},
+                           router=None)
+    assert "router" not in snap                  # None groups dropped
+    assert snap["search"]["queries"] == 4
+    assert snap["pager"]["searches"] == 7
+    # everything is plain python (json-serializable), lists included
+    doc = json.loads(export.to_json(snap))
+    assert doc["search"]["hops_hist"][0] == 1    # the zero-hop lane
+
+    prom = export.to_prometheus(snap)
+    assert "# TYPE repro_search_queries gauge" in prom
+    assert "repro_search_queries 4" in prom
+    assert 'repro_search_hops_hist{index="0"} 1' in prom
+    assert "repro_pager_hops 3.5" in prom
+    assert export.to_prometheus({}) == ""
+
+
+def test_export_transfer_stats_group():
+    """TransferStats round-trips through snapshot/prometheus with its
+    per-block-size series."""
+    from repro.core import deltatree as DT
+    from repro.obs import export, transfers as OTR
+
+    cfg = TreeConfig(height=4, max_dnodes=256, buf_cap=8,
+                     collect_stats=True, collect_transfers=True)
+    t = DT.bulk_build(cfg, KEYS)
+    ts = OTR.measure(cfg, t, _queries())
+    snap = export.snapshot(transfers=ts)
+    d = snap["transfers"]
+    assert d["queries"] == 11 and d["pad_lanes"] == 2
+    prom = export.to_prometheus(snap)
+    for b in OTR.TRANSFER_BLOCK_SIZES:
+        assert f"repro_transfers_blocks_b{b} " in prom
+    json.loads(export.to_json(snap))             # serializable end to end
+
+
+def test_serve_stats_probe_accounting():
+    s = ServeStats.zero()
+    s = s.record_probe(12, 9)
+    s = s.record(1e-3, pending=2, flushed=False)  # steps don't disturb it
+    s = s.record_probe(4, 0)
+    assert int(s.probe_queries) == 16 and int(s.probe_hits) == 9
+    assert int(s.steps) == 1
+    d = s.asdict()
+    assert d["probe_queries"] == 16 and d["probe_hits"] == 9
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), s, s)
+    red = ServeStats.reduce(stacked)
+    assert int(red.probe_queries) == 32 and int(red.probe_hits) == 18
+    assert int(red.steps) == 2

@@ -337,6 +337,20 @@ assert obs["queue_hwm"] >= 1, obs
 # (rejected / cancelled-while-waiting never do)
 assert obs["admitted"] == sum(
     r.admit_step >= 0 for r in sch.active.values()), obs
+# probe read-side traffic lands in ServeStats (zipf probes in the plan)
+n_probes = sum(len(p.probe_refs) for p in plans)
+assert obs["probe_queries"] == n_probes > 0, obs
+assert 0 <= obs["probe_hits"] <= obs["probe_queries"], obs
+# metrics() snapshots every stats source in all three formats
+snap = sch.metrics()
+assert snap["serve"]["probe_queries"] == n_probes
+assert snap["maintenance"]["drains"] == sch.worker.stats()["drains"]
+assert snap["pager"]["searches"] == sch.pager.stats["searches"]
+prom = sch.metrics("prometheus")
+assert "# TYPE repro_serve_steps gauge" in prom
+assert "repro_pager_searches" in prom
+import json as _json
+assert _json.loads(sch.metrics("json"))["serve"]["steps"] == obs["steps"]
 for sid, req in sch.active.items():
     if not req.done:
         continue

@@ -110,12 +110,13 @@ def main() -> None:
     smoke = args.smoke
 
     from benchmarks import engine_compare, fig11_small_tree, fig12_big_tree
-    from benchmarks import forest_scale, maint_sweep, table1_transfers
+    from benchmarks import forest_scale, maint_sweep, scan_sweep
+    from benchmarks import table1_transfers
     from benchmarks import ub_sweep
 
     todo = args.only.split(",") if args.only else [
         "table1", "ub_sweep", "fig11", "fig12", "serve", "serve_trace",
-        "forest", "engines", "maint"]
+        "forest", "engines", "maint", "scan"]
     rows: list = []
 
     def add(suite, got):
@@ -171,6 +172,10 @@ def main() -> None:
                                           backend=backend, engine=engine,
                                           maintenance=args.maintenance,
                                           smoke=smoke))
+        if "scan" in todo:
+            add("scan", scan_sweep.main(quick=quick, seed=seed,
+                                        backend=backend, engine=engine,
+                                        smoke=smoke))
     if args.trace_dir:
         from repro.obs import trace as OT
 

@@ -23,6 +23,7 @@ from repro.api.index import (
     IndexSpec,
 )
 from repro.api.opbatch import OP_DELETE, OP_INSERT, OP_SEARCH, OpBatch
+from repro.core.scan import ScanCursor, ScanResult
 from repro.api.registry import (
     available_backends,
     get_backend,
@@ -43,6 +44,8 @@ __all__ = [
     "OP_SEARCH",
     "OP_INSERT",
     "OP_DELETE",
+    "ScanCursor",
+    "ScanResult",
     "available_backends",
     "get_backend",
     "make_index",

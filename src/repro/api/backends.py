@@ -12,6 +12,7 @@ via ``OpBatch.mask_searches`` (a delete of key 0, which is never stored).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,7 @@ from repro.api.index import BackendSpec, Capability
 from repro.api.opbatch import OpBatch
 from repro.api.registry import register_backend
 from repro.core import baselines as BL
+from repro.core import layout
 from repro.core import deltatree as DT
 from repro.core import transfers as TR
 from repro.core.deltatree import TreeConfig
@@ -52,6 +54,25 @@ def _dt_update(cfg, t, batch: OpBatch):
     return DT.update_batch(cfg, t, batch.kinds, batch.keys, batch.payloads)
 
 
+def _unpack_scan(cfg, out, n, hops, more):
+    """Packed engine-scan rows -> the BackendSpec scan contract: (keys,
+    payloads, n, hops, more) with (K, max_items) int32 rows zero-padded
+    past ``n`` (0 is outside the key domain, so the pad is unambiguous)."""
+    span = jnp.arange(out.shape[1], dtype=jnp.int32)
+    valid = span[None, :] < n[:, None]
+    keys = jnp.where(valid, cfg.key_of(out).astype(jnp.int32), 0)
+    pays = jnp.where(valid, cfg.payload_of(out).astype(jnp.int32), 0)
+    return keys, pays, n, hops, more
+
+
+def _dt_scan(cfg, t, starts, his, max_items):
+    return _unpack_scan(cfg, *DT.scan_jit(cfg, t, starts, his, max_items))
+
+
+def _dt_successor_k(cfg, t, keys, k):
+    return _unpack_scan(cfg, *DT.successor_k_jit(cfg, t, keys, k))
+
+
 def _dt_size(cfg, t) -> int:
     # I5/I5': between steps every live item is a live leaf or a buffered
     # entry (never both — inserts dedup against the buffer), so
@@ -65,11 +86,13 @@ register_backend(BackendSpec(
     make=_dt_make,
     capability=lambda cfg: Capability(
         map_mode=cfg.payload_bits > 0, successor=True, sharded=False,
-        deferred_maintenance=True),
+        deferred_maintenance=True, range_scan=True, successor_k=True),
     search=DT.search_jit,
     lookup=DT.lookup_jit,
     update=_dt_update,
     successor=DT.successor_jit,
+    scan=_dt_scan,
+    successor_k=_dt_successor_k,
     live_items=DT.live_items,
     size=_dt_size,
     touch=TR.delta_touch_fn,
@@ -123,6 +146,15 @@ def _forest_update(cfg, f, batch: OpBatch):
     return F.update_batch(cfg, f, batch.kinds, batch.keys, batch.payloads)
 
 
+def _forest_scan(cfg, f, starts, his, max_items):
+    return _unpack_scan(
+        cfg.tree, *F.scan_batch(cfg, f, starts, his, max_items=max_items))
+
+
+def _forest_successor_k(cfg, f, keys, k):
+    return _unpack_scan(cfg.tree, *F.successor_k(cfg, f, keys, k))
+
+
 def _forest_size(cfg, f) -> int:
     t = f.trees
     return int(jnp.sum(jnp.where(t.alive, t.nlive + t.bcount, 0)))
@@ -133,11 +165,14 @@ register_backend(BackendSpec(
     make=_forest_make,
     capability=lambda cfg: Capability(
         map_mode=cfg.tree.payload_bits > 0, successor=True, sharded=True,
-        deferred_maintenance=True, fused_forest=_forest_fused(cfg)),
+        deferred_maintenance=True, fused_forest=_forest_fused(cfg),
+        range_scan=True, successor_k=True),
     search=F.search_batch,
     lookup=F.lookup_batch,
     update=_forest_update,
     successor=F.successor_jit,
+    scan=_forest_scan,
+    successor_k=_forest_successor_k,
     live_items=F.live_items,
     size=_forest_size,
     alloc_failed=lambda cfg, f: F.alloc_failed(f),
@@ -189,13 +224,42 @@ def _sa_live_items(cfg, state):
     return [(int(v), 0) for v in np.asarray(state.vals)[:n]]
 
 
+@functools.partial(jax.jit, static_argnums=3)
+def _sa_scan(state, starts, his, max_items):
+    """Dense-scan honesty baseline: the page is one searchsorted window
+    per lane over the flat sorted array — no tree walk at all, which is
+    exactly why it should win dense ranges in the scan sweep."""
+    starts = jnp.asarray(starts, jnp.int32)
+    his = jnp.asarray(his, jnp.int32)
+    i0 = jnp.searchsorted(state.vals, starts, side="right").astype(jnp.int32)
+    ic = jnp.searchsorted(state.vals, his, side="right").astype(jnp.int32)
+    total = jnp.maximum(
+        jnp.minimum(ic, state.n) - jnp.minimum(i0, state.n), 0)
+    span = jnp.arange(max_items, dtype=jnp.int32)
+    idx = jnp.clip(i0[:, None] + span[None, :], 0, state.vals.shape[0] - 1)
+    valid = span[None, :] < total[:, None]
+    keys = jnp.where(valid, state.vals[idx], 0)
+    return (keys, jnp.zeros_like(keys),
+            jnp.minimum(total, jnp.int32(max_items)),
+            jnp.zeros_like(starts), total > max_items)
+
+
+def _sa_successor_k(cfg, state, keys, k):
+    keys = jnp.asarray(keys, jnp.int32)
+    his = jnp.full(keys.shape, layout.KEY_MAX, jnp.int32)
+    return _sa_scan(state, keys, his, k)
+
+
 register_backend(BackendSpec(
     name="sorted_array",
     make=_sa_make,
-    capability=lambda cfg: Capability(successor=True),
+    capability=lambda cfg: Capability(successor=True, range_scan=True,
+                                      successor_k=True),
     search=lambda cfg, state, keys: _sa_search(state, keys),
     update=_sa_update,
     successor=lambda cfg, state, keys: _sa_successor(state, keys),
+    scan=lambda cfg, state, starts, his, mi: _sa_scan(state, starts, his, mi),
+    successor_k=_sa_successor_k,
     live_items=_sa_live_items,
     size=lambda cfg, state: int(state.n),
     touch=lambda cfg, state: BL.SortedArray.touch_fn(state),
@@ -291,12 +355,39 @@ def _sv_live_items(cfg, state):
     return [(int(v), 0) for v in BL.StaticVEB.to_sorted(state)]
 
 
+def _sv_scan(cfg, state, starts, his, max_items):
+    """Host-side scan over the recovered sorted key set (the VTMtree
+    analog rebuilds wholesale anyway, so its ordered reads are honest as
+    a host replay of the layout's in-order traversal)."""
+    vals = np.asarray(BL.StaticVEB.to_sorted(state), np.int32)
+    starts = np.asarray(starts, np.int32)
+    his = np.asarray(his, np.int32)
+    i0 = np.searchsorted(vals, starts, side="right")
+    ic = np.searchsorted(vals, his, side="right")
+    total = np.maximum(ic - i0, 0)
+    keys = np.zeros((starts.shape[0], max_items), np.int32)
+    for j in range(starts.shape[0]):
+        got = vals[i0[j]: ic[j]][:max_items]
+        keys[j, : got.size] = got
+    return (jnp.asarray(keys), jnp.zeros_like(jnp.asarray(keys)),
+            jnp.asarray(np.minimum(total, max_items), jnp.int32),
+            jnp.zeros((starts.shape[0],), jnp.int32),
+            jnp.asarray(total > max_items))
+
+
+def _sv_successor_k(cfg, state, keys, k):
+    his = np.full(np.asarray(keys).shape, layout.KEY_MAX, np.int32)
+    return _sv_scan(cfg, state, keys, his, k)
+
+
 register_backend(BackendSpec(
     name="static_veb",
     make=_sv_make,
-    capability=lambda cfg: Capability(),
+    capability=lambda cfg: Capability(range_scan=True, successor_k=True),
     search=_sv_search,
     update=_sv_update,
+    scan=_sv_scan,
+    successor_k=_sv_successor_k,
     live_items=_sv_live_items,
     size=lambda cfg, state: int(BL.StaticVEB.to_sorted(state).size),
     touch=lambda cfg, state: BL.StaticVEB.touch_fn(state),

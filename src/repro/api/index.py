@@ -22,6 +22,8 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.api.opbatch import OpBatch
 
@@ -37,6 +39,8 @@ class Capability:
     deferred_maintenance: bool = False  # non-eager policies + flush()
     fused_forest: bool = False  # sharded reads share one fused frontier
     #                             (engine provides forest_batch + enabled)
+    range_scan: bool = False  # ordered range pages (range_scan + cursors)
+    successor_k: bool = False  # bulk k-successor reads (successor_k)
 
 
 class CapabilityError(NotImplementedError):
@@ -90,6 +94,13 @@ class BackendSpec:
     size: Callable[..., int]                    # (cfg, state) -> int
     lookup: Callable[..., Any] | None = None    # (cfg, state, keys) -> (found, payload, hops)
     successor: Callable[..., Any] | None = None  # (cfg, state, keys) -> (found, succ)
+    scan: Callable[..., Any] | None = None      # (cfg, state, starts, his, max_items)
+    #                                             -> (keys, payloads, n, hops, more);
+    #                                             starts EXCLUSIVE / his INCLUSIVE,
+    #                                             (K, max_items) rows ascending,
+    #                                             zero-padded past n; hops 0 for
+    #                                             backends with no tree walk
+    successor_k: Callable[..., Any] | None = None  # (cfg, state, keys, k) -> same contract
     touch: Callable[..., Any] | None = None     # (cfg, state) -> (key -> [flat indices])
     alloc_failed: Callable[..., bool] | None = None  # (cfg, state) -> bool
     flush: Callable[..., Any] | None = None     # (cfg, state) -> (state, stats)
@@ -178,6 +189,47 @@ class Index:
         self._require("successor", self.spec.backend.successor)
         return self.spec.backend.successor(self.spec.cfg, self.state, keys)
 
+    def range_scan(self, lo: int, hi: int, *, max_items: int = 128,
+                   cursor: "ScanCursor | None" = None) -> "ScanResult":
+        """One ordered page of the live set: up to ``max_items`` (key,
+        payload) rows with ``lo <= key <= hi``, ascending.  Host-facing
+        (returns numpy views).  When the page fills before the range is
+        exhausted, ``result.more`` is True and ``result.cursor`` resumes
+        the next page: ``ix.range_scan(lo, hi, cursor=result.cursor)``
+        (the cursor's bounds override ``lo``/``hi``).  Each page reads
+        the *current* snapshot — concurrent updates between pages are
+        seen from their page boundary onward, like any wait-free read."""
+        from repro.core import layout
+        from repro.core.scan import ScanCursor, ScanResult
+
+        self._require("range_scan", self.spec.backend.scan)
+        if cursor is not None:
+            lo, hi = cursor.last_key + 1, cursor.hi
+        hi = min(int(hi), layout.KEY_MAX)
+        start = jnp.asarray([max(int(lo) - 1, 0)], jnp.int32)
+        his = jnp.asarray([hi], jnp.int32)
+        ks, ps, n, _, more = self.spec.backend.scan(
+            self.spec.cfg, self.state, start, his, max_items)
+        count = int(n[0])
+        truncated = bool(more[0]) and count > 0
+        keys = np.asarray(ks[0])[:count]
+        pays = np.asarray(ps[0])[:count]
+        cur = (ScanCursor(last_key=int(keys[-1]), hi=hi)
+               if truncated else None)
+        return ScanResult(keys=keys, payloads=pays, more=truncated,
+                          cursor=cur)
+
+    def successor_k(self, keys: jax.Array, k: int):
+        """Bulk ordered read: per query, the ``k`` smallest live keys
+        strictly greater.  Returns (keys (K, k) int32 ascending rows,
+        payloads (K, k) int32, n (K,) int32, hops (K,) int32, more (K,)
+        bool) — rows are zero-padded past ``n``; ``more`` marks queries
+        with further successors beyond the ``k`` returned; ``hops`` is 0
+        for backends with no tree walk."""
+        self._require("successor_k", self.spec.backend.successor_k)
+        return self.spec.backend.successor_k(
+            self.spec.cfg, self.state, keys, k)
+
     # ---- updates ----
 
     def insert_delete(self, batch: OpBatch):
@@ -217,7 +269,12 @@ class Index:
         return int(self.spec.backend.size(self.spec.cfg, self.state))
 
     def live_items(self) -> list[tuple[int, int]]:
-        """All live (key, payload) pairs, key-sorted (host-side, for tests)."""
+        """All live (key, payload) pairs in ascending GLOBAL key order
+        (host-side, for tests).  The ordering is a contract, not a
+        convenience: sharded backends must return split-order shard
+        outputs concatenated (shard order == key order), so this list is
+        the conformance oracle `range_scan`/`successor_k` pages are
+        checked against — a full scan replays ``live_items`` exactly."""
         return list(self.spec.backend.live_items(self.spec.cfg, self.state))
 
     def touch_fn(self):

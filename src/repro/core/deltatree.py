@@ -1288,3 +1288,138 @@ def successor_batch(cfg: TreeConfig, t: DeltaTree, keys: jax.Array):
 def successor_jit(cfg: TreeConfig, t: DeltaTree, keys: jax.Array):
     """Jitted engine-dispatched successor queries."""
     return successor_batch(cfg, t, keys)
+
+
+def scan_one(cfg: TreeConfig, t: DeltaTree, start, hi, max_out: int,
+             chase_slack: int = 16):
+    """Scalar reference for the emit-cursor scan: emit up to ``max_out``
+    live *leaf* items with ``start < key <= hi`` in key order (wait-free
+    read; overflow buffers are merged by the engine dispatch, where I5'
+    correctness lives).
+
+    The pass structure mirrors the lockstep scan kernel exactly
+    (`kernels.ref.ref_delta_scan_fused`): alternate a FIND pass (the
+    `successor_one` candidate walk, leaf fold included) with a VERIFY
+    pass (exact walk for the candidate key — candidate routers may be
+    tombstones; dead candidates are chased without emitting).  ``hops``
+    counts ΔNode visits across every pass — bit-identical to the
+    lockstep accounting.
+
+    Returns (out (max_out,) packed ascending with ``cfg.route_left``
+    padding, n int32, hops int32, more bool); ``more`` means the buffer
+    filled with live items remaining — resume from ``key_of(out[n-1])``.
+    """
+    pos = _pos(cfg)
+    bottom0 = cfg.bottom0
+    big = cfg.route_left
+    pm = jnp.asarray(cfg.pmask, cfg.vdtype)
+    start_q = cfg.qpack(jnp.asarray(start, jnp.int32))
+    hi_q = cfg.qpack(jnp.asarray(hi, jnp.int32))
+    max_passes = 2 * (max_out + chase_slack)
+
+    def walk_pass(q):
+        # one full root-to-leaf walk: (cand fold, leaf_val, leaf_live,
+        # ΔNodes visited) — the eager-descent twin of one kernel pass
+        def cond(s):
+            return ~s[2]
+
+        def body(s):
+            dn, b, _, cand, hops = s
+            router = t.value[dn, pos[b]]
+            at_bottom = b >= bottom0
+            left_val = jnp.where(
+                at_bottom, jnp.zeros((), cfg.vdtype),
+                t.value[dn, pos[jnp.minimum(2 * b, 2 * bottom0 - 1)]],
+            )
+            internal = (~at_bottom) & (left_val != EMPTY)
+            go_left = internal & (q < router)
+            cand = jnp.where(go_left & (router < cand), router, cand)
+            slot = jnp.where(at_bottom, b - bottom0, 0)
+            ch = jnp.where(at_bottom, t.child[dn, slot], NONE)
+            hop = at_bottom & (ch >= 0)
+            nb = jnp.where(internal, 2 * b + (q >= router).astype(jnp.int32), b)
+            nb = jnp.where(hop, jnp.int32(1), nb)
+            ndn = jnp.where(hop, ch, dn)
+            done = (~internal) & (~hop)
+            return ndn, nb, done, cand, hops + hop.astype(jnp.int32)
+
+        dn, b, _, cand, hops = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(t.root), jnp.int32(1), jnp.bool_(False), big,
+             jnp.int32(1)))
+        leaf_val = t.value[dn, pos[b]]
+        leaf_live = (leaf_val != EMPTY) & ~t.mark[dn, pos[b]]
+        return cand, leaf_val, leaf_live, hops
+
+    def outer_cond(s):
+        return (~s["done"]) & (s["passes"] < max_passes)
+
+    def outer_body(s):
+        cand, lv, live, h1 = walk_pass(s["cursor"])
+        leaf_fold = live & (lv > s["cursor"]) & (lv < cand)
+        cand = jnp.where(leaf_fold, lv, cand)
+        none = (cand == big) | (cand > hi_q)
+        pending = cand | pm
+
+        def verify(_):
+            _, lv2, live2, h2 = walk_pass(pending)
+            hit = live2 & ((lv2 | pm) == pending)
+            return lv2, hit, h2
+
+        lv2, hit, h2 = jax.lax.cond(
+            none,
+            lambda _: (jnp.zeros((), cfg.vdtype), jnp.bool_(False),
+                       jnp.int32(0)),
+            verify, None)
+        can_emit = s["n"] < max_out
+        emit = (~none) & hit & can_emit
+        full = (~none) & hit & ~can_emit
+        upd = s["out"].at[jnp.minimum(s["n"], max_out - 1)].set(lv2)
+        return dict(
+            cursor=jnp.where(emit | ((~none) & ~hit), pending, s["cursor"]),
+            out=jnp.where(emit, upd, s["out"]),
+            n=s["n"] + emit.astype(jnp.int32),
+            hops=s["hops"] + h1 + h2,
+            more=s["more"] | full,
+            done=s["done"] | none | full,
+            passes=s["passes"] + 1,
+        )
+
+    init = dict(cursor=start_q,
+                out=jnp.full((max_out,), big, cfg.vdtype),
+                n=jnp.int32(0), hops=jnp.int32(0),
+                more=jnp.bool_(False), done=jnp.bool_(False),
+                passes=jnp.int32(0))
+    s = jax.lax.while_loop(outer_cond, outer_body, init)
+    return s["out"], s["n"], s["hops"], s["more"]
+
+
+def scan_batch(cfg: TreeConfig, t: DeltaTree, starts: jax.Array,
+               his: jax.Array, max_out: int):
+    """Vectorized ordered scans via ``cfg.engine`` (buffered items merged
+    under non-eager maintenance — see `engine.scan`)."""
+    from repro.core import engine as E  # deferred: engine imports this module
+
+    return E.scan(cfg, t, starts, his, max_out=max_out)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def scan_jit(cfg: TreeConfig, t: DeltaTree, starts: jax.Array,
+             his: jax.Array, max_out: int):
+    """Jitted engine-dispatched range scans."""
+    return scan_batch(cfg, t, starts, his, max_out)
+
+
+def successor_k_batch(cfg: TreeConfig, t: DeltaTree, keys: jax.Array,
+                      k: int):
+    """Bulk ordered reads: the ``k`` smallest live keys strictly greater
+    than each query key — a scan with an unbounded upper band."""
+    keys = jnp.asarray(keys, jnp.int32)
+    his = jnp.full(keys.shape, layout.KEY_MAX, jnp.int32)
+    return scan_batch(cfg, t, keys, his, k)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def successor_k_jit(cfg: TreeConfig, t: DeltaTree, keys: jax.Array, k: int):
+    """Jitted engine-dispatched successor_k queries."""
+    return successor_k_batch(cfg, t, keys, k)

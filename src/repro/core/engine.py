@@ -88,6 +88,12 @@ class ForestBatch:
     lookup: Callable[..., Any]
     successor: Callable[..., Any]
     make_view: Callable[..., Any] | None = None
+    # scan: (cfg, trees, starts[S_loc], his[S_loc], max_out, *, view=None)
+    #       -> (out[S_loc, max_out], n, hops, more) — one emit-cursor lane
+    #       per co-resident shard over the fused view (each lane scans its
+    #       own arena band), per-shard I5' buffered merge included; None
+    #       means the forest falls back to the dense per-shard dispatch
+    scan: Callable[..., Any] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +104,12 @@ class SearchEngine:
                — map-mode read; set mode returns payload 0/-1.  ``search``
                and ``contains`` are this minus the payload column.
     successor: (cfg, t, keys[K]) -> (found[K], succ[K])
+    scan_batch: optional ordered bulk read — (cfg, t, starts[K], his[K],
+               max_out, root=None) -> (out[K, max_out] packed, n[K],
+               hops[K], more[K]) — up to ``max_out`` live *leaf* items per
+               lane with start < key <= hi, key ascending; tree side only
+               (the `scan` dispatch merges I5' buffered items).  None
+               means the engine cannot serve range_scan/successor_k.
     forest_batch: optional fused cross-shard read entry point
                (``ForestBatch``); None means the forest falls back to the
                dense per-shard vmap dispatch for this engine.
@@ -106,6 +118,7 @@ class SearchEngine:
     name: str
     lookup: Callable[..., Any]
     successor: Callable[..., Any]
+    scan_batch: Callable[..., Any] | None = None
     forest_batch: ForestBatch | None = None
 
 
@@ -281,6 +294,100 @@ def _fold_floor(cfg, bf, found, succ):
     return found | bfound, jnp.where(better, bkey, succ)
 
 
+def scan(cfg, t, starts: jax.Array, his: jax.Array, *, max_out: int,
+         root=None):
+    """Engine-dispatched ordered bulk read: per lane, up to ``max_out``
+    live items with ``start < key <= hi`` in key order.
+
+    Returns (out (K, max_out) packed ascending with ``cfg.route_left``
+    padding, n (K,), hops (K,), more (K,) bool); ``more`` marks lanes that
+    filled their buffer with live items remaining — the continuation
+    cursor is ``key_of(out[lane, n-1])``.
+
+    Under a non-eager maintenance policy the engines' tree-side run
+    misses pending overflow-buffer items (invariant I5'); the dispatch
+    merges them here — ONE shared sorted-buffer merge above both engines
+    (`_merge_buffered_run`), so scalar/lockstep bit-parity of the merged
+    run is structural, exactly like `successor`'s `_fold_floor`.  Eager
+    trees skip the merge (buffers drain every step — I5).
+    """
+    eng = get_engine(cfg.engine)
+    if eng.scan_batch is None:
+        raise NotImplementedError(
+            f"engine {cfg.engine!r} declares no scan_batch hook")
+    with TR.annotate(f"engine.{cfg.engine}.scan"):
+        out, n, hops, more = eng.scan_batch(cfg, t, starts, his, max_out,
+                                            root=root)
+    policy = getattr(cfg, "maintenance", "eager")
+    if policy == "eager" or not hasattr(cfg, "route_left"):
+        return out, n, hops, more
+    out, n, more = _merge_buffered_run(cfg, t, starts, his, out, n, more,
+                                       max_out)
+    return out, n, hops, more
+
+
+def successor_k(cfg, t, keys: jax.Array, k: int):
+    """Engine-dispatched bulk successors: the ``k`` smallest live keys
+    strictly greater than each query key — `scan` with an unbounded upper
+    band (same return contract; ``more`` = more than ``k`` successors)."""
+    keys = jnp.asarray(keys, jnp.int32)
+    his = jnp.full(keys.shape, layout.KEY_MAX, jnp.int32)
+    return scan(cfg, t, keys, his, max_out=k)
+
+
+def _merge_buffered_lane(cfg, sorted_buf, start, hi, out, n, more,
+                         max_out: int):
+    """Merge one lane's I5' buffered items into its emitted tree run.
+
+    ``sorted_buf`` is a packed ascending buffer arena view (``big``
+    padding); the lane's eligible band is (start, cap] where ``cap`` is
+    the last tree-emitted key when the tree side overflowed (items past
+    the truncation point belong to the continuation — unseen *tree* items
+    there could precede them) and ``hi`` otherwise.  Leaves and buffers
+    are key-disjoint (inserts dedup against both), so the union of two
+    sorted runs is strictly sorted and a concat+sort merge is exact.
+    """
+    big = cfg.route_left
+    pm = jnp.asarray(cfg.pmask, cfg.vdtype)
+    nb = sorted_buf.shape[0]
+    idx0 = jnp.searchsorted(sorted_buf, cfg.qpack(start),
+                            side="right").astype(jnp.int32)
+    last = out[jnp.clip(n - 1, 0, max_out - 1)]
+    cap = jnp.where(more, last | pm, cfg.qpack(hi))
+    idxc = jnp.searchsorted(sorted_buf, cap, side="right").astype(jnp.int32)
+    bic = idxc - idx0                     # buffered count in (start, cap]
+    span = jnp.arange(max_out, dtype=jnp.int32)
+    win = jnp.clip(idx0 + span, 0, nb - 1)
+    cands = jnp.where(span < bic, sorted_buf[win], big)
+    union = jnp.sort(jnp.concatenate([out, cands]))
+    return (union[:max_out],
+            jnp.minimum(jnp.int32(max_out), n + bic),
+            more | (n + bic > max_out))
+
+
+def _merge_buffered_run(cfg, t, starts, his, out, n, more, max_out: int):
+    """Per-lane `_merge_buffered_lane` over one arena's buffers: one
+    global sort of the buffer arena + searchsorted windows per lane,
+    skipped entirely in the common drained state (`buffered_floor`'s
+    shape)."""
+    starts = jnp.asarray(starts, jnp.int32)
+    his = jnp.asarray(his, jnp.int32)
+    big = cfg.route_left
+
+    def with_items(_):
+        flat = jnp.where(t.buf != EMPTY, t.buf, big).reshape(-1)
+        s = jnp.sort(flat)
+        return jax.vmap(
+            lambda st, hb, o, nn, mm: _merge_buffered_lane(
+                cfg, s, st, hb, o, nn, mm, max_out)
+        )(starts, his, out, n, more)
+
+    def drained(_):
+        return out, n, more
+
+    return jax.lax.cond(jnp.any(t.bcount > 0), with_items, drained, None)
+
+
 def forest_batch(cfg) -> ForestBatch | None:
     """``cfg.engine``'s fused forest entry point (None = vmap dispatch)."""
     return get_engine(cfg.engine).forest_batch
@@ -307,10 +414,29 @@ def _scalar_successor(cfg, t, keys: jax.Array):
     return jax.vmap(lambda k: DT.successor_one(cfg, t, k))(keys)
 
 
+def _scalar_scan(cfg, t, starts: jax.Array, his: jax.Array, max_out: int,
+                 root=None):
+    """vmap of the per-lane reference scan (`DT.scan_one`).  ``root`` is
+    the fused-view multi-root seed — lockstep-only; the scalar engine has
+    no fused forest path so it must stay None."""
+    assert root is None, "scalar scan_batch takes no multi-root seeds"
+    starts = jnp.asarray(starts, jnp.int32)
+    his = jnp.asarray(his, jnp.int32)
+    out, n, hops, more = jax.vmap(
+        lambda s, h: DT.scan_one(cfg, t, s, h, max_out))(starts, his)
+    # reserved ROUTE_LEFT starts are born done under the lockstep pad-lane
+    # sentinel contract: mirror it (empty run, hops 0) for bit parity
+    pad = starts == layout.ROUTE_LEFT
+    big = jnp.asarray(cfg.route_left, cfg.vdtype)
+    return (jnp.where(pad[:, None], big, out),
+            jnp.where(pad, 0, n), jnp.where(pad, 0, hops), more & ~pad)
+
+
 register_engine(SearchEngine(
     name="scalar",
     lookup=_scalar_lookup,
     successor=_scalar_successor,
+    scan_batch=_scalar_scan,
 ))
 
 
@@ -413,6 +539,24 @@ def _lockstep_successor(cfg, t, keys: jax.Array, max_chase: int = 8):
     return _successor_chase(cfg, t, keys, max_chase=max_chase)
 
 
+def _lockstep_scan(cfg, t, starts: jax.Array, his: jax.Array, max_out: int,
+                   root=None):
+    """The emit-cursor scan frontier: ONE `delta_scan` dispatch for the
+    whole scan — every FIND/VERIFY pass of every lane inside a single
+    launch (`veb_scan_fused`, or its XLA mirror where Pallas cannot
+    lower).  ``root`` as in `_lockstep_walk`: per-lane seeds drive the
+    fused multi-shard view, each lane scanning its own arena."""
+    from repro.kernels import ops as OPS
+
+    starts = jnp.asarray(starts, jnp.int32)
+    his = jnp.asarray(his, jnp.int32)
+    return OPS.delta_scan(
+        t.value, t.mark, t.child, t.root if root is None else root,
+        _walk_queries(cfg, starts), cfg.qpack(his),
+        height=cfg.height, max_out=max_out, pmask=int(cfg.pmask),
+        q_tile=cfg.q_tile or None)
+
+
 # ---- fused cross-shard frontier (the forest_batch entry point) ----
 
 
@@ -509,13 +653,53 @@ def _fused_lockstep_successor(cfg, trees, lid, keys: jax.Array,
     return found[:k], succ[:k], found[k:], succ[k:]
 
 
+def _fused_lockstep_scan(cfg, trees, lid, starts: jax.Array, his: jax.Array,
+                         max_out: int, *, view=None):
+    """Fused cross-shard scan: every lane scans inside one shard of the
+    base-offset view — lane ``j`` is seeded at shard ``lid[j]``'s fused
+    root, so its run is exactly that shard's band of the range and ONE
+    `delta_scan` dispatch serves every (lane, shard) pair the forest
+    tiles out.  The I5' buffered merge runs per lane against its *own*
+    shard's buffers (shards partition the key space, so a pending item is
+    only ever mergeable into its owner shard's band) — the same
+    `_merge_buffered_lane` the single-arena dispatch uses, so fused/vmap
+    bit-parity of the merged run is structural."""
+    starts = jnp.asarray(starts, jnp.int32)
+    his = jnp.asarray(his, jnp.int32)
+    lid = jnp.asarray(lid, jnp.int32)
+    view, roots = _fused_trees_view(cfg, trees) if view is None else view
+    out, n, hops, more = _lockstep_scan(cfg, view, starts, his, max_out,
+                                        root=roots[lid])
+    policy = getattr(cfg, "maintenance", "eager")
+    if policy == "eager":
+        return out, n, hops, more
+    big = cfg.route_left
+
+    def with_items(_):
+        flat = jnp.where(trees.buf != EMPTY, trees.buf, big)
+        per_shard = jnp.sort(flat.reshape(trees.buf.shape[0], -1), axis=1)
+        return jax.vmap(
+            lambda s_id, st, hb, o, nn, mm: _merge_buffered_lane(
+                cfg, per_shard[s_id], st, hb, o, nn, mm, max_out)
+        )(lid, starts, his, out, n, more)
+
+    def drained(_):
+        return out, n, more
+
+    out, n, more = jax.lax.cond(jnp.any(trees.bcount > 0), with_items,
+                                drained, None)
+    return out, n, hops, more
+
+
 register_engine(SearchEngine(
     name="lockstep",
     lookup=_lockstep_lookup,
     successor=_lockstep_successor,
+    scan_batch=_lockstep_scan,
     forest_batch=ForestBatch(
         lookup=_fused_lockstep_lookup,
         successor=_fused_lockstep_successor,
         make_view=_fused_trees_view,
+        scan=_fused_lockstep_scan,
     ),
 ))

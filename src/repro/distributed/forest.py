@@ -421,6 +421,86 @@ def _successor_core(fcfg: ForestConfig, f: Forest, keys: jax.Array, view):
 
 
 # --------------------------------------------------------------------------
+# ordered bulk reads (range scan / successor_k)
+# --------------------------------------------------------------------------
+
+
+def scan_batch(fcfg: ForestConfig, f: Forest, starts: jax.Array,
+               his: jax.Array, *, max_items: int):
+    """Routed wait-free range scan: per lane, up to ``max_items`` live
+    items with ``start < key <= hi`` in *global* key order.
+
+    Returns the engine `scan` contract — (out (K, max_items) packed
+    ascending with sentinel padding, n (K,), hops (K,), more (K,) bool).
+    Unlike point reads, a range can span shards, so every lane is scanned
+    against every shard (one emit-cursor lane per (lane, shard) pair —
+    still ONE ``delta_scan`` dispatch under the fused frontier); shards
+    partition the key space in split order, so the per-shard bands
+    concatenate sorted and the first ``max_items`` of the union are the
+    globally correct page even when an early shard's band truncated
+    (everything after a truncated band belongs to the continuation).
+    ``hops`` is the lane's total ΔNode visits across all shards."""
+    return _scan_core(fcfg, f, starts, his, max_items,
+                      _maybe_cached_view(fcfg, f))
+
+
+def successor_k(fcfg: ForestConfig, f: Forest, keys: jax.Array, k: int):
+    """Routed bulk successors: the ``k`` smallest live keys strictly
+    greater than each query, forest-wide (same return contract as
+    `scan_batch`; subsumes the point `successor_jit` fallthrough — the
+    scan's shard bands are what the suffix-min combine approximates for
+    k=1)."""
+    keys = jnp.asarray(keys, jnp.int32)
+    his = jnp.full(keys.shape, layout.KEY_MAX, jnp.int32)
+    return _scan_core(fcfg, f, keys, his, k, _maybe_cached_view(fcfg, f))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _scan_core(fcfg: ForestConfig, f: Forest, starts: jax.Array,
+               his: jax.Array, max_items: int, view):
+    cfg = fcfg.tree
+    starts = _route_keys(starts)
+    his = _route_keys(his)
+    s = fcfg.num_shards
+    k = starts.shape[0]
+    fb = _fused(fcfg)
+    if fb is not None and fb.scan is not None:
+        # (lane, shard) tiling, shard-major: tiled lane s*k + i scans
+        # lane i's band inside shard s, seeded at that shard's fused
+        # root; sid routes each tiled lane to its shard's device
+        sid = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+
+        def per_device(trees_loc, lid, bounds, view_loc):
+            st, hb = bounds
+            return fb.scan(cfg, trees_loc, lid, st, hb, max_items,
+                           view=view_loc), None
+
+        r, lane, _ = R.fused_dispatch(
+            s, per_device, f.trees, sid,
+            (jnp.tile(starts, s), jnp.tile(his, s)), view=view)
+        out, n, hops, more = R.gather_fused(r, lane)
+        out = out.reshape(s, k, max_items)
+        n, hops, more = (n.reshape(s, k), hops.reshape(s, k),
+                         more.reshape(s, k))
+    else:
+
+        def per_shard(t):
+            return E.scan(cfg, t, starts, his, max_out=max_items)
+
+        out, n, hops, more = R.dispatch(s, per_shard, f.trees)
+    # shard bands are key-disjoint and shard order == key order: the
+    # sorted union's first max_items are exactly the bands in split
+    # order, truncated where the page fills (sentinel padding sorts last)
+    union = jnp.sort(out.transpose(1, 0, 2).reshape(k, s * max_items),
+                     axis=1)[:, :max_items]
+    total = jnp.sum(n, axis=0)
+    return (union,
+            jnp.minimum(jnp.int32(max_items), total),
+            jnp.sum(hops, axis=0),
+            jnp.any(more, axis=0) | (total > max_items))
+
+
+# --------------------------------------------------------------------------
 # batched updates
 # --------------------------------------------------------------------------
 

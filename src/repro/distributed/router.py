@@ -217,14 +217,19 @@ def fused_dispatch(num_shards: int, fn, trees, sid, keys, view=None):
     sloc = num_shards // d
     r = route_by(sid // jnp.int32(sloc), d)
     dlid = scatter_dense(r, d, sid % jnp.int32(sloc), jnp.int32(0))
-    dkeys = scatter_dense(r, d, keys, jnp.int32(layout.ROUTE_LEFT))
+    # ``keys`` may be a pytree of per-lane columns (the scan path sends
+    # (starts, his) pairs); every leaf scatters identically, and the pad
+    # fill is the born-resolved sentinel either way
+    dkeys = jax.tree.map(
+        lambda x: scatter_dense(r, d, x, jnp.int32(layout.ROUTE_LEFT)), keys)
 
     def body(trees_loc, lid_loc, keys_loc, *view_arg):
         # each device's view slice arrives with a leading length-1 device
         # axis (the build's x[None] wrap) — peel it before the hook
         view_loc = (jax.tree.map(lambda x: x[0], view_arg[0])
                     if view_arg else None)
-        lane, per_shard = fn(trees_loc, lid_loc[0], keys_loc[0], view_loc)
+        lane, per_shard = fn(trees_loc, lid_loc[0],
+                             jax.tree.map(lambda x: x[0], keys_loc), view_loc)
         # lane leaves regain a leading device axis so shard_map stacks
         # them to (D, K); per-shard leaves concatenate to (S,) directly
         return jax.tree.map(lambda x: x[None], lane), per_shard

@@ -45,7 +45,7 @@ import jax.numpy as jnp
 from repro.core import layout
 from repro.kernels.delta_paged_attention import paged_decode_attention  # noqa: F401
 from repro.kernels.veb_search import (
-    pad_arena, veb_walk_fused, veb_walk_rows, walk_big,
+    pad_arena, veb_scan_fused, veb_walk_fused, veb_walk_rows, walk_big,
 )
 from repro.obs import trace as TR
 
@@ -359,6 +359,92 @@ def _delta_walk(value, child, root, queries, *, height, q_tile, max_rounds,
     state = jax.lax.while_loop(cond, body, state)
     return (state["leaf_val"][:k], state["leaf_b"][:k],
             state["final_dn"][:k], state["hops"][:k], state["cand"][:k])
+
+
+def scan_round_cap(height: int, max_dnodes: int, max_out: int,
+                   chase_slack: int = 16) -> int:
+    """Trace-time round bound for the emit-cursor scan frontier: each
+    emitted item costs at most two full walk passes (FIND + VERIFY), each
+    bounded by `walk_round_cap`, plus slack passes for tombstone chases.
+    Generous by design — the in-kernel loop exits as soon as every lane
+    is done, so the cap only bounds the lowered loop."""
+    return walk_round_cap(height, max_dnodes) * 2 * (max_out + chase_slack)
+
+
+def delta_scan(value: jax.Array, mark: jax.Array, child: jax.Array,
+               root: jax.Array, starts: jax.Array, his: jax.Array, *,
+               height: int, max_out: int, pmask: int = 0,
+               q_tile: int | None = None, max_rounds: int | None = None,
+               interpret: bool | None = None):
+    """Ordered range/successor-k scan in lockstep passes over the lane
+    frontier — the emit-cursor variant of `delta_walk` (ONE dispatch for
+    the whole scan, every pass inside a single launch).
+
+    value/mark/child are unpadded arena arrays; ``starts``/``his`` are
+    *packed* ``qpack`` bounds per lane (start exclusive, hi inclusive in
+    key space).  ``root`` is scalar or per-lane (K,) seeds — the
+    multi-root form drives one fused scan across concatenated shard
+    arenas (`veb_search.fuse_arenas`), each lane emitting its owner
+    shard's band.  A lane whose start equals ``walk_big(dtype)`` is born
+    done (the router's pad-lane contract).
+
+    Single-launch discipline matches `delta_walk`: the persistent Pallas
+    kernel `veb_search.veb_scan_fused` where it lowers (interpret mode
+    anywhere; compiled on TPU for int32 arenas within the VMEM budget),
+    else the XLA-compiled mirror `ref.ref_delta_scan_fused` — both
+    bit-identical, pass logic documented on the mirror.
+
+    Returns per lane (pad width sliced off):
+      out:  (K, max_out) packed live *leaf* values in (start, hi], key
+            ascending, ``walk_big`` padding (overflow buffers are merged
+            by the engine dispatch — I5' correctness lives there)
+      n:    emitted count
+      hops: ΔNode visits across every pass (`delta_walk` accounting)
+      more: bool — buffer filled with live items remaining; resume from
+            ``key_of(out[lane, n-1])``
+    """
+    TR.bump("delta_scan.dispatch")
+    q_tile = _resolve_q_tile(
+        q_tile, height, 0 if value.dtype == jnp.int32 else 1)
+    if max_rounds is None:
+        max_rounds = scan_round_cap(height, value.shape[0], max_out)
+    interpret = _resolve_interpret(interpret)
+    with TR.annotate("delta_scan"):
+        return _delta_scan(value, mark, child, root, starts, his,
+                           height=height, max_out=max_out, pmask=pmask,
+                           q_tile=q_tile, max_rounds=int(max_rounds),
+                           interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("height", "max_out", "pmask", "q_tile",
+                              "max_rounds", "interpret")
+)
+def _delta_scan(value, mark, child, root, starts, his, *, height, max_out,
+                pmask, q_tile, max_rounds, interpret: bool):
+    starts = starts.astype(value.dtype)
+    his = his.astype(value.dtype)
+    k = starts.shape[0]
+    dn0 = jnp.broadcast_to(jnp.asarray(root, jnp.int32), (k,))
+    value_p, child_p = pad_arena(value, child)
+    if not _fused_pallas_ok(value_p, child_p, interpret):
+        from repro.kernels.ref import ref_delta_scan_fused
+
+        return ref_delta_scan_fused(value, mark, child, dn0, starts, his,
+                                    height=height, max_rounds=max_rounds,
+                                    max_out=max_out, pmask=pmask)
+    mark_p = jnp.pad(mark, ((0, 0), (0, value_p.shape[1] - mark.shape[1])))
+    kp = (k + q_tile - 1) // q_tile * q_tile
+    big = walk_big(value.dtype)
+    spad = jnp.pad(starts, (0, kp - k), constant_values=big)
+    hpad = jnp.pad(his, (0, kp - k), constant_values=big)
+    dnpad = jnp.pad(dn0, (0, kp - k))
+    out, n, hops, more = veb_scan_fused(
+        value_p, mark_p, child_p, dnpad, spad, hpad, height=height,
+        max_out=max_out, pmask=pmask, q_tile=q_tile, max_rounds=max_rounds,
+        interpret=interpret)
+    return (out[:k, :max_out], n[:k], hops[:k],
+            more[:k].astype(jnp.bool_))
 
 
 def delta_search(value: jax.Array, child: jax.Array, root: jax.Array,

@@ -148,6 +148,145 @@ def ref_delta_walk_fused(value: jax.Array, child: jax.Array, root: jax.Array,
     return (s["leaf_val"], s["leaf_b"], s["final_dn"], s["hops"], s["cand"])
 
 
+@functools.partial(
+    jax.jit, static_argnames=("height", "max_rounds", "max_out", "pmask"))
+def ref_delta_scan_fused(value: jax.Array, mark: jax.Array, child: jax.Array,
+                         root: jax.Array, starts: jax.Array, his: jax.Array,
+                         *, height: int, max_rounds: int, max_out: int,
+                         pmask: int = 0):
+    """Fused emit-cursor scan frontier, XLA-compiled: the whole
+    find/verify/emit loop in one program (contract of ``ops.delta_scan``).
+
+    Each lane carries an emit cursor over the packed key space and fills
+    ``out[lane, :]`` with the live *leaf* values in ``(start, hi]`` in key
+    order (packed, ascending; ``walk_big`` pads unused slots).  ``starts``
+    and ``his`` are packed ``qpack`` bounds: start exclusive, hi inclusive
+    in key space (``v > start_q`` iff ``key(v) > start_key`` since qpack
+    packs an all-ones payload).  A lane alternates two pass kinds over the
+    same blind-descent round structure as ``ref_delta_walk_fused``:
+
+    * FIND — a successor walk from the root for the cursor, folding
+      left-turn routers plus the final live leaf into a candidate;
+    * VERIFY — an exact walk for the candidate key (candidate routers may
+      be tombstones); a live hit is emitted and becomes the new cursor, a
+      dead one is chased (cursor advances past it without emitting).
+
+    Overflow buffers are NOT consulted — the engine dispatch merges
+    I5' buffered items into the emitted run (``repro.core.engine``), so
+    both engines share one merge and stay bit-identical.
+
+    Returns (out (K, max_out) packed, n (K,) int32, hops (K,) int32,
+    more (K,) bool).  ``hops`` counts ΔNode visits across every pass —
+    exactly the rounds the lane stayed active, matching ``delta_walk``'s
+    accounting.  ``more`` marks lanes whose buffer filled with live items
+    remaining; the continuation cursor is the last emitted key
+    (``key_of(out[lane, n-1])``).  A lane whose start equals ``walk_big``
+    is born done (the q_tile pad contract).
+    """
+    from repro.kernels.veb_search import walk_big
+
+    h = height
+    bottom0 = 2 ** (h - 1)
+    m, ub = value.shape
+    pos = jnp.asarray(layout.veb_pos_table(h))
+    big = jnp.asarray(walk_big(value.dtype), value.dtype)
+    starts = starts.astype(value.dtype)
+    his = his.astype(value.dtype)
+    k = starts.shape[0]
+    vflat = value.reshape(-1)
+    mflat = mark.reshape(-1)
+    dn0 = jnp.broadcast_to(jnp.asarray(root, jnp.int32), (k,))
+    pm = jnp.asarray(pmask, value.dtype)
+
+    state = dict(
+        dn=dn0,
+        verify=jnp.zeros((k,), jnp.bool_),
+        q=starts,                       # FIND: cursor_q; VERIFY: pending_q
+        cursor=starts,                  # start / last emitted (packed qpack)
+        cand=jnp.full((k,), big, value.dtype),
+        out=jnp.full((k, max_out), big, value.dtype),
+        n=jnp.zeros((k,), jnp.int32),
+        hops=jnp.zeros((k,), jnp.int32),
+        more=jnp.zeros((k,), jnp.bool_),
+        done=starts == big,             # sentinel lanes born done
+        rounds=jnp.int32(0),
+    )
+
+    def cond(s):
+        return jnp.any(~s["done"]) & (s["rounds"] < max_rounds)
+
+    def body(s):
+        dnc = jnp.clip(s["dn"], 0, m - 1)
+        base = dnc * ub
+        v = s["q"]
+        b = jnp.ones((k,), jnp.int32)
+        lb = jnp.ones((k,), jnp.int32)          # last occupied position
+        lv = jnp.zeros((k,), value.dtype)
+        routers, bs = [], []
+        for _ in range(h):                       # blind descent: h gathers
+            router = vflat.at[base + pos[b]].get(mode="promise_in_bounds")
+            routers.append(router)
+            bs.append(b)
+            occ = router != EMPTY
+            lb = jnp.where(occ, b, lb)
+            lv = jnp.where(occ, router, lv)
+            go_right = v >= router               # EMPTY always routes right
+            b = jnp.where(b < bottom0, 2 * b + go_right.astype(b.dtype), b)
+        rcand = jnp.full((k,), big, value.dtype)
+        for router, bi in zip(routers, bs):      # post-hoc candidate fold
+            fold = ((router != EMPTY) & (bi != lb) & (v < router)
+                    & (router < rcand))
+            rcand = jnp.where(fold, router, rcand)
+        at_bottom = lb >= bottom0
+        slot = jnp.where(at_bottom, lb - bottom0, 0)
+        ch = child.at[dnc, slot].get(mode="promise_in_bounds")
+        nxt = jnp.where(at_bottom, ch, jnp.int32(-1))
+        act = ~s["done"]
+        hopping = act & (nxt >= 0)
+        res = act & (nxt < 0)                    # pass resolved this round
+        # pass-level candidate fold (FIND passes only)
+        cand = jnp.where(act & ~s["verify"] & (rcand < s["cand"]),
+                         rcand, s["cand"])
+        leaf_mark = mflat.at[base + pos[lb]].get(mode="promise_in_bounds")
+        leaf_live = (lv != EMPTY) & ~leaf_mark
+        # FIND resolution: fold the final leaf, then accept / stop
+        f_res = res & ~s["verify"]
+        leaf_fold = f_res & leaf_live & (lv > s["cursor"]) & (lv < cand)
+        cand = jnp.where(leaf_fold, lv, cand)
+        f_none = f_res & ((cand == big) | (cand > his))
+        pending = cand | pm                      # qpack of candidate key
+        to_verify = f_res & ~f_none
+        # VERIFY resolution: emit a live hit, chase a tombstone
+        v_res = res & s["verify"]
+        hit = v_res & leaf_live & ((lv | pm) == s["q"])
+        can_emit = s["n"] < max_out
+        emit = hit & can_emit
+        full = hit & ~can_emit
+        chase = v_res & ~hit
+        col = jnp.arange(max_out, dtype=jnp.int32)[None, :]
+        out = jnp.where(emit[:, None] & (col == s["n"][:, None]),
+                        lv[:, None], s["out"])
+        back_to_find = emit | chase
+        restart = to_verify | back_to_find
+        return dict(
+            dn=jnp.where(hopping, nxt, jnp.where(restart, dn0, s["dn"])),
+            verify=jnp.where(to_verify, True,
+                             jnp.where(back_to_find, False, s["verify"])),
+            q=jnp.where(to_verify, pending, s["q"]),
+            cursor=jnp.where(back_to_find, s["q"], s["cursor"]),
+            cand=jnp.where(restart, big, cand),
+            out=out,
+            n=s["n"] + emit.astype(jnp.int32),
+            hops=s["hops"] + act.astype(jnp.int32),
+            more=s["more"] | full,
+            done=s["done"] | f_none | full,
+            rounds=s["rounds"] + 1,
+        )
+
+    s = jax.lax.while_loop(cond, body, state)
+    return s["out"], s["n"], s["hops"], s["more"]
+
+
 @functools.partial(jax.jit, static_argnames=("height",))
 def ref_delta_search(value: jax.Array, child: jax.Array, root: jax.Array,
                      queries: jax.Array, *, height: int):

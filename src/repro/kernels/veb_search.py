@@ -276,6 +276,189 @@ def veb_walk_fused(value_p: jax.Array, child_p: jax.Array, roots: jax.Array,
     )(pos, queries, roots, value_p, child_p)
 
 
+def _scan_kernel(height: int, big: int, pmask: int, max_rounds: int,
+                 max_out: int, mo_p: int, m: int,
+                 pos_ref, start_ref, hi_ref, root_ref, value_ref, mark_ref,
+                 child_ref, out_ref, n_ref, hops_ref, more_ref):
+    """Persistent emit-cursor scan: the whole find/verify/emit loop of
+    ``ops.delta_scan`` inside one kernel launch (per q_tile grid cell).
+
+    Same blind-descent round structure as ``_fused_kernel``; each lane
+    additionally carries a scan cursor, a FIND/VERIFY mode bit and an
+    emit index into a VMEM-resident (QT, mo_p) output tile.  The exact
+    pass logic is documented on the bit-exact oracle,
+    ``ref.ref_delta_scan_fused``; ``mo_p`` is the lane-padded buffer
+    width (emission is still capped at ``max_out``).
+    """
+    h = height
+    bottom0 = 2 ** (h - 1)
+    pos = pos_ref[...]
+    starts = start_ref[...]                              # (QT,) packed
+    his = hi_ref[...]
+    dn0 = root_ref[...]
+    vflat = value_ref[...].reshape(-1)                   # (M * UBp,)
+    mflat = mark_ref[...].reshape(-1)
+    cflat = child_ref[...].reshape(-1)
+    ub = value_ref.shape[1]
+    cp = child_ref.shape[1]
+    bigv = jnp.asarray(big, vflat.dtype)
+    pm = jnp.asarray(pmask, vflat.dtype)
+    col = jnp.arange(mo_p, dtype=jnp.int32)[None, :]
+
+    def cond(s):
+        return jnp.any(~s[9]) & (s[10] < max_rounds)
+
+    def body(s):
+        (dn, verify, q, cursor, cand, out, n, hops, more, done, rounds) = s
+        dnc = jnp.clip(dn, 0, m - 1)
+        base = dnc * ub
+        b = jnp.ones(q.shape, jnp.int32)
+        lb = jnp.ones(q.shape, jnp.int32)          # last occupied position
+        lv = jnp.zeros(q.shape, vflat.dtype)
+        routers, bs = [], []
+        for _ in range(h):                          # blind descent
+            router = jnp.take(vflat, base + pos[b])
+            routers.append(router)
+            bs.append(b)
+            occ = router != EMPTY
+            lb = jnp.where(occ, b, lb)
+            lv = jnp.where(occ, router, lv)
+            go_right = q >= router
+            b = jnp.where(b < bottom0, 2 * b + go_right.astype(b.dtype), b)
+        rcand = jnp.full(q.shape, big, vflat.dtype)
+        for router, bi in zip(routers, bs):         # post-hoc cand fold
+            fold = ((router != EMPTY) & (bi != lb) & (q < router)
+                    & (router < rcand))
+            rcand = jnp.where(fold, router, rcand)
+        at_bottom = lb >= bottom0
+        slot = jnp.where(at_bottom, lb - bottom0, 0)
+        ch = jnp.take(cflat, dnc * cp + slot)
+        nxt = jnp.where(at_bottom, ch, jnp.int32(-1))
+        act = ~done
+        hopping = act & (nxt >= 0)
+        res = act & (nxt < 0)
+        cand = jnp.where(act & ~verify & (rcand < cand), rcand, cand)
+        leaf_mark = jnp.take(mflat, base + pos[lb])
+        leaf_live = (lv != EMPTY) & ~leaf_mark
+        f_res = res & ~verify
+        leaf_fold = f_res & leaf_live & (lv > cursor) & (lv < cand)
+        cand = jnp.where(leaf_fold, lv, cand)
+        f_none = f_res & ((cand == bigv) | (cand > his))
+        pending = cand | pm
+        to_verify = f_res & ~f_none
+        v_res = res & verify
+        hit = v_res & leaf_live & ((lv | pm) == q)
+        can_emit = n < max_out
+        emit = hit & can_emit
+        full = hit & ~can_emit
+        chase = v_res & ~hit
+        out = jnp.where(emit[:, None] & (col == n[:, None]),
+                        lv[:, None], out)
+        back_to_find = emit | chase
+        restart = to_verify | back_to_find
+        return (
+            jnp.where(hopping, nxt, jnp.where(restart, dn0, dn)),
+            jnp.where(to_verify, True,
+                      jnp.where(back_to_find, False, verify)),
+            jnp.where(to_verify, pending, q),
+            jnp.where(back_to_find, q, cursor),
+            jnp.where(restart, bigv, cand),
+            out,
+            n + emit.astype(jnp.int32),
+            hops + act.astype(jnp.int32),
+            more | full,
+            done | f_none | full,
+            rounds + 1,
+        )
+
+    init = (
+        dn0,
+        jnp.zeros(starts.shape, jnp.bool_),
+        starts,
+        starts,
+        jnp.full(starts.shape, big, vflat.dtype),
+        jnp.full((starts.shape[0], mo_p), big, vflat.dtype),
+        jnp.zeros(starts.shape, jnp.int32),
+        jnp.zeros(starts.shape, jnp.int32),
+        jnp.zeros(starts.shape, jnp.bool_),
+        starts == bigv,                             # sentinel lanes done
+        jnp.int32(0),
+    )
+    s = jax.lax.while_loop(cond, body, init)
+    out_ref[...] = s[5]
+    n_ref[...] = s[6]
+    hops_ref[...] = s[7]
+    more_ref[...] = s[8].astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("height", "q_tile", "max_rounds",
+                                    "max_out", "pmask", "interpret"))
+def veb_scan_fused(value_p: jax.Array, mark_p: jax.Array, child_p: jax.Array,
+                   roots: jax.Array, starts: jax.Array, his: jax.Array, *,
+                   height: int, max_out: int, pmask: int = 0,
+                   q_tile: int = 256, max_rounds: int = 256,
+                   interpret: bool = True):
+    """All scan passes in one launch (grid over query tiles).
+
+    value_p/mark_p: (M, UBp) padded arena rows + mark bits (`pad_arena` /
+                    same padding), int32/int64 rows
+    child_p:        (M, CP)  padded bottom-slot child ids (-1 none)
+    roots:          (K,)     int32 per-lane frontier seeds
+    starts/his:     (K,)     packed qpack bounds (start exclusive, hi
+                    inclusive in key space); K % q_tile == 0; a start of
+                    ``walk_big`` marks a pad lane (born done)
+
+    Returns the `ops.delta_scan` 4-tuple (out (K, mo_p) packed with the
+    lane-padded width ``mo_p = roundup(max_out, 128)`` — callers slice to
+    ``max_out`` — n, hops, more(int32)), contract and bit-for-bit results
+    documented on ``ref.ref_delta_scan_fused``.  The whole arena is
+    mapped into every grid cell — same VMEM budget gate as
+    ``veb_walk_fused``.
+    """
+    k = starts.shape[0]
+    assert k % q_tile == 0, (k, q_tile)
+    assert starts.dtype == value_p.dtype, (starts.dtype, value_p.dtype)
+    n_tiles = k // q_tile
+    m, ubp = value_p.shape
+    cp = child_p.shape[1]
+    big = walk_big(value_p.dtype)
+    mo_p = _round_up(max_out, 128)
+
+    pos = jnp.asarray(layout.veb_pos_table(height))
+    posp = _round_up(pos.shape[0], 128)
+    pos = jnp.pad(pos, (0, posp - pos.shape[0]))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((k, mo_p), value_p.dtype),   # out
+        jax.ShapeDtypeStruct((k,), jnp.int32),            # n
+        jax.ShapeDtypeStruct((k,), jnp.int32),            # hops
+        jax.ShapeDtypeStruct((k,), jnp.int32),            # more
+    ]
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, height, big, pmask, max_rounds,
+                          max_out, mo_p, m),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((posp,), lambda i: (0,)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((m, ubp), lambda i: (0, 0)),
+            pl.BlockSpec((m, ubp), lambda i: (0, 0)),
+            pl.BlockSpec((m, cp), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, mo_p), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+            pl.BlockSpec((q_tile,), lambda i: (i,)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pos, starts, his, roots, value_p, mark_p, child_p)
+
+
 def pad_arena(value: jax.Array, child: jax.Array):
     """Pad arena rows to 128-lane multiples for the kernel."""
     ubp = _round_up(value.shape[1], 128)

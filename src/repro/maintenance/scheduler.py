@@ -39,12 +39,12 @@ from repro.maintenance.policy import MaintenancePolicy, parse_policy
 from repro.maintenance.stats import MaintenanceStats
 from repro.obs import trace as TR
 
-_Work = tuple  # (rebuilds, expands, merges) int32 scalars
+_Work = tuple  # (rebuilds, expands, merges, reclaimed) int32 scalars
 
 
 def _zero_work() -> _Work:
     z = jnp.int32(0)
-    return (z, z, z)
+    return (z, z, z, z)
 
 
 def pending_count(cfg, t) -> jax.Array:
@@ -186,7 +186,8 @@ def _ins_sweep(cfg, t, work, mask, budget):
         def run(s):
             t, work = s
             tt, rebuilds, expands = DT._process_ins(cfg, t, dn)
-            return tt, (work[0] + rebuilds, work[1] + expands, work[2])
+            return tt, (work[0] + rebuilds, work[1] + expands, work[2],
+                        work[3])
 
         return jax.lax.cond(dn >= 0, run, lambda s: s, s)
 
@@ -207,7 +208,9 @@ def _del_sweep(cfg, t, work, mask, budget):
         def run(s):
             t, work = s
             tt, merged = DT._process_del(cfg, t, dn)
-            return tt, (work[0], work[1], work[2] + merged)
+            # freed arena slots = freelist growth across the splice
+            return tt, (work[0], work[1], work[2] + merged,
+                        work[3] + (tt.free_top - t.free_top))
 
         return jax.lax.cond(dn >= 0, run, lambda s: s, s)
 
@@ -271,6 +274,7 @@ def _run_relaxed(cfg, policy: MaintenancePolicy, t, kinds, keys, payloads,
     m = cfg.max_dnodes
     vol = policy.budget if policy.kind == "budgeted" else 0
     vol_k = min(vol, m) if vol else 0
+    low_water = max(1, m // 8)  # freelist pressure threshold (slots)
 
     def forced_mask(t, pending, residual, dns):
         """ΔNodes that must be repaired now: targets of *blocked* pending
@@ -304,7 +308,7 @@ def _run_relaxed(cfg, policy: MaintenancePolicy, t, kinds, keys, payloads,
                 # I5'-violating state — mark residual so the forced sweep
                 # drains it before the step returns, same as forced repairs
                 residual = residual.at[ids[j]].set(tt.bcount[ids[j]] > 0)
-                return (tt, (work[0] + rb, work[1] + ex, work[2]),
+                return (tt, (work[0] + rb, work[1] + ex, work[2], work[3]),
                         repairs + 1, residual)
 
             return jax.lax.cond((vals[j] >= 0) & (repairs < vol), run,
@@ -312,8 +316,24 @@ def _run_relaxed(cfg, policy: MaintenancePolicy, t, kinds, keys, payloads,
 
         t, work, repairs, residual = jax.lax.fori_loop(
             0, vol_k, ins_body, (t, work, repairs, residual))
-        del_ids = jnp.nonzero(t.del_flag & t.alive, size=vol_k,
-                              fill_value=-1)[0]
+        # Merge-candidate selection.  Normally candidates run in arena
+        # order (the historical ``nonzero`` order).  When the freelist
+        # drops below the low-water mark, rank by the reclaimable-arena
+        # estimate instead: candidates whose splice will return a child
+        # slot to the freelist (live sibling, no children, drained
+        # buffer) run first, so a starved allocator recovers slots
+        # before the budget is spent on no-op merges.
+        idx = jnp.arange(m, dtype=jnp.int32)
+        cand = t.del_flag & t.alive
+        sib_ok = t.child[jnp.maximum(t.parent, 0), t.pslot ^ 1] >= 0
+        reclaim = ((t.parent >= 0) & sib_ok & (t.nchild == 0)
+                   & (t.bcount == 0))
+        pressure = t.free_top < low_water
+        rank = jnp.where(cand,
+                         idx + jnp.where(pressure & ~reclaim, m, 0),
+                         2 * m)
+        order = jnp.argsort(rank)[:vol_k].astype(jnp.int32)
+        del_ids = jnp.where(rank[order] < 2 * m, order, -1)
 
         def del_body(j, s):
             t, work, repairs, residual = s
@@ -328,8 +348,9 @@ def _run_relaxed(cfg, policy: MaintenancePolicy, t, kinds, keys, payloads,
             def run(s):
                 t, work, repairs, residual = s
                 tt, mg = DT._process_del(cfg, t, dn)
-                return (tt, (work[0], work[1], work[2] + mg), repairs + 1,
-                        residual)
+                return (tt, (work[0], work[1], work[2] + mg,
+                             work[3] + (tt.free_top - t.free_top)),
+                        repairs + 1, residual)
 
             return jax.lax.cond(
                 (dn >= 0) & (repairs < vol) & parent_clear, run,
@@ -405,7 +426,7 @@ def run_update(cfg, t, kinds, keys, payloads=None):
             cfg, policy, t, kinds, keys, payloads, results, pending, budget)
     stats = MaintenanceStats(
         rounds=rounds, rebuilds=work[0], expands=work[1], merges=work[2],
-        pending=pending_count(cfg, t))
+        pending=pending_count(cfg, t), reclaimed=work[3])
     return t, results, stats
 
 
@@ -434,5 +455,5 @@ def flush(cfg, t, budget: int = 64):
         round_cond, round_body, (t, jnp.int32(0), _zero_work()))
     stats = MaintenanceStats(
         rounds=rounds, rebuilds=work[0], expands=work[1], merges=work[2],
-        pending=pending_count(cfg, t))
+        pending=pending_count(cfg, t), reclaimed=work[3])
     return t, stats

@@ -42,6 +42,7 @@ from repro.obs.stats import (
     MaintenanceStats,
     ReadStats,
     RouterStats,
+    ScanStats,
     SearchStats,
     ServeStats,
     TransferStats,
@@ -51,6 +52,7 @@ __all__ = [
     "MaintenanceStats",
     "ReadStats",
     "RouterStats",
+    "ScanStats",
     "SearchStats",
     "ServeStats",
     "TransferStats",

@@ -34,6 +34,7 @@ ID_KEYS = [
     "suite", "bench", "backend", "engine", "dispatch", "walk",
     "maintenance", "update_pct", "batch", "ub", "height", "shards",
     "devices", "q_tile", "flush_every", "initial_keys", "seed", "skipped",
+    "density", "max_items",
 ]
 
 # Execution-mode stamps (obs PR): describe the machine, not the workload.
@@ -48,8 +49,8 @@ LOWER_BETTER = {
 }
 
 # Primary metric per row, first present wins (name, higher_is_better).
-PRIMARY = [("ops_per_s", True), ("paged_step_us", False),
-           ("loads", False), ("seconds", False)]
+PRIMARY = [("ops_per_s", True), ("scans_per_s", True),
+           ("paged_step_us", False), ("loads", False), ("seconds", False)]
 
 
 def load(path: str) -> dict:
@@ -126,7 +127,7 @@ def _row_label(r: dict) -> str:
     return " ".join(
         _fmt(r[k]) for k in ("bench", "backend", "engine", "dispatch",
                              "maintenance", "update_pct", "batch", "ub",
-                             "height", "shards")
+                             "height", "shards", "density", "max_items")
         if r.get(k) is not None) or "(row)"
 
 

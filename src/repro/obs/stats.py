@@ -52,11 +52,17 @@ class MaintenanceStats(NamedTuple):
     expands: jax.Array   # () int32 — child ΔNodes allocated by Expand
     merges: jax.Array    # () int32 — successful Merge splices
     pending: jax.Array   # () int32 — buffered items carried forward (I5')
+    reclaimed: jax.Array = jnp.int32(0)  # () int32 — arena slots freed
+    #                      by Merge splicing away a child ΔNode (the
+    #                      freelist-pressure signal the budgeted Merge
+    #                      ranking feeds on; trailing default keeps older
+    #                      5-field construction sites valid)
 
     @classmethod
     def zero(cls) -> "MaintenanceStats":
         z = jnp.int32(0)
-        return cls(rounds=z, rebuilds=z, expands=z, merges=z, pending=z)
+        return cls(rounds=z, rebuilds=z, expands=z, merges=z, pending=z,
+                   reclaimed=z)
 
     @classmethod
     def reduce(cls, stacked: "MaintenanceStats") -> "MaintenanceStats":
@@ -68,6 +74,7 @@ class MaintenanceStats(NamedTuple):
             expands=jnp.sum(stacked.expands),
             merges=jnp.sum(stacked.merges),
             pending=jnp.sum(stacked.pending),
+            reclaimed=jnp.sum(stacked.reclaimed),
         )
 
     def merge(self, other: "MaintenanceStats") -> "MaintenanceStats":
@@ -79,6 +86,7 @@ class MaintenanceStats(NamedTuple):
             expands=self.expands + other.expands,
             merges=self.merges + other.merges,
             pending=other.pending,
+            reclaimed=self.reclaimed + other.reclaimed,
         )
 
     def asdict(self) -> dict:
@@ -334,6 +342,62 @@ class ReadStats(NamedTuple):
     search: SearchStats
     router: RouterStats | None = None
     transfers: TransferStats | None = None
+
+
+class ScanStats(NamedTuple):
+    """Range-scan / bulk-ordered-read telemetry.  One ``of`` per scan
+    dispatch (a whole lane batch); counters fold with ``merge`` and
+    stacked legs aggregate with ``reduce`` like the other stats classes.
+    ``truncated`` counts lanes whose output buffer filled before the
+    range was exhausted (``more=True`` — the caller holds a continuation
+    cursor), which is the honest signal that a sweep under-sized
+    ``max_items``."""
+
+    scans: jax.Array      # () int32 — scan dispatches folded in
+    lanes: jax.Array      # () int32 — scan lanes served
+    emitted: jax.Array    # () int32 — (key, payload) rows emitted
+    truncated: jax.Array  # () int32 — lanes that filled max_items (more)
+    hops_sum: jax.Array   # () int32 — total ΔNode visits across lanes
+    hops_max: jax.Array   # () int32 — worst single-lane ΔNode visits
+
+    @classmethod
+    def zero(cls) -> "ScanStats":
+        z = jnp.int32(0)
+        return cls(scans=z, lanes=z, emitted=z, truncated=z,
+                   hops_sum=z, hops_max=z)
+
+    @classmethod
+    def of(cls, n: jax.Array, hops: jax.Array,
+           more: jax.Array) -> "ScanStats":
+        """Build from one scan dispatch's per-lane columns (the engine's
+        ``(out, n, hops, more)`` tail)."""
+        return cls(scans=jnp.int32(1),
+                   lanes=jnp.int32(n.shape[0]),
+                   emitted=jnp.sum(n).astype(jnp.int32),
+                   truncated=jnp.sum(more.astype(jnp.int32)),
+                   hops_sum=jnp.sum(hops).astype(jnp.int32),
+                   hops_max=jnp.max(hops).astype(jnp.int32))
+
+    def merge(self, other: "ScanStats") -> "ScanStats":
+        return ScanStats(scans=self.scans + other.scans,
+                         lanes=self.lanes + other.lanes,
+                         emitted=self.emitted + other.emitted,
+                         truncated=self.truncated + other.truncated,
+                         hops_sum=self.hops_sum + other.hops_sum,
+                         hops_max=jnp.maximum(self.hops_max, other.hops_max))
+
+    @classmethod
+    def reduce(cls, stacked: "ScanStats") -> "ScanStats":
+        """Aggregate stacked (S,) legs: counters sum, hops_max maxes."""
+        return cls(scans=jnp.sum(stacked.scans),
+                   lanes=jnp.sum(stacked.lanes),
+                   emitted=jnp.sum(stacked.emitted),
+                   truncated=jnp.sum(stacked.truncated),
+                   hops_sum=jnp.sum(stacked.hops_sum),
+                   hops_max=jnp.max(stacked.hops_max))
+
+    def asdict(self) -> dict:
+        return {k: int(v) for k, v in self._asdict().items()}
 
 
 class ServeStats(NamedTuple):

@@ -48,7 +48,7 @@ from repro.api import Index
 from repro.distributed import forest as DF
 from repro.models.config import ModelConfig
 from repro.obs import trace as OT
-from repro.obs.stats import ServeStats
+from repro.obs.stats import ScanStats, ServeStats
 from repro.serve import decode as D
 from repro.serve.combine import dedupe_lookups
 from repro.serve.queue import RequestQueue, ServeRequest
@@ -114,6 +114,7 @@ class ServeScheduler:
         self._probe_combined = 0
         self._combined_mark = 0   # combined ops already folded into obs
         self.obs = ServeStats.zero()
+        self.scan_obs = ScanStats.zero()
         self.last_step_info: dict = {}
 
     def _apply_uncombined(self):
@@ -289,6 +290,42 @@ class ServeScheduler:
                                          int((out >= 0).sum()))
         return out
 
+    def scan(self, seq_ids, max_items: int | None = None):
+        """Ordered read service: each referenced sequence's full
+        block -> page mapping in block order, resolved through ONE
+        engine scan dispatch (one emit-cursor lane per sequence over the
+        pager index's contiguous per-sequence key band) — the bulk
+        companion to ``probe``'s point lookups.  Like ``probe`` it runs
+        between steps against the current wait-free snapshot; staged
+        (unapplied) allocations are invisible until the step barrier's
+        combined update lands.
+
+        Returns ``{seq_id: np.ndarray of page ids in block order}``
+        (empty array for unmapped sequences).  Folds one ``ScanStats``
+        sample into ``self.scan_obs`` (exported by ``metrics()``)."""
+        pg = self.pager
+        ix = pg.index
+        ix._require("range_scan", ix.spec.backend.scan)
+        if max_items is None:
+            max_items = pg.cfg.max_blocks
+        sids = np.asarray(seq_ids, np.int64)
+        # per-sequence key band: blocks of sid pack contiguously, so the
+        # band (key(sid, -1), key(sid, max_blocks - 1)] is exactly its
+        # block table (start bound is exclusive in the scan contract)
+        starts = jnp.asarray(pg._key(sids, np.full(sids.shape, -1)),
+                             jnp.int32)
+        his = jnp.asarray(pg._key(sids, np.full(sids.shape,
+                                                pg.cfg.max_blocks - 1)),
+                          jnp.int32)
+        with OT.span("serve.scan"):
+            _, pages, n, hops, more = ix.spec.backend.scan(
+                ix.spec.cfg, ix.state, starts, his, max_items)
+        pg.stats["searches"] += len(sids)
+        pg.stats["hops"] += int(np.asarray(hops).sum())
+        self.scan_obs = self.scan_obs.merge(ScanStats.of(n, hops, more))
+        pages, n = np.asarray(pages), np.asarray(n)
+        return {int(s): pages[i, : n[i]] for i, s in enumerate(sids)}
+
     # ---------------------------------------------------------- metrics ---
 
     def metrics(self, fmt: str = "dict"):
@@ -306,6 +343,7 @@ class ServeScheduler:
         tr = OT.counters()
         snap = OX.snapshot(
             serve=self.obs,
+            scan=self.scan_obs,
             maintenance=self.worker.stats(),
             pager=self.pager.stats,
             search=rs.search if rs is not None else None,

@@ -239,7 +239,8 @@ def test_stats_shim_and_fields():
     assert legacy == int(rounds.rounds)
     assert any(issubclass(x.category, DeprecationWarning) for x in w)
     d = rounds.asdict()
-    assert set(d) == {"rounds", "rebuilds", "expands", "merges", "pending"}
+    assert set(d) == {"rounds", "rebuilds", "expands", "merges",
+                      "pending", "reclaimed"}
     zero = MaintenanceStats.zero()
     assert int(zero.rounds) == 0
 

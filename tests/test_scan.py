@@ -1,0 +1,352 @@
+"""Range scans & bulk ordered ops (DESIGN.md §15).
+
+Conformance for the ordered-read tentpole: every backend declaring
+``Capability.range_scan`` / ``successor_k`` is checked against a numpy
+oracle over randomized traces — through the host-facing
+``Index.range_scan`` (inclusive ``[lo, hi]``, cursor pagination) and the
+raw batched 5-tuple hook.  Engine parity (scalar vs lockstep) and forest
+dispatch parity (fused frontier vs dense vmap) must hold *bit for bit*,
+keys AND payloads AND hops, including buffered items carried by deferred
+maintenance (invariant I5').  Subprocess legs replay the forest scan over
+8 fake host devices (real shard_map dispatch) and the serve scheduler's
+``scan()`` under x64.  The satellite legs pin the ``reclaimed``
+maintenance counter and the ``live_items`` global-order contract the
+scan oracle depends on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    CapabilityError,
+    OpBatch,
+    ScanCursor,
+    make_index,
+)
+from repro.core.oracle import SetOracle
+from tests._subproc import run_py
+
+KEY_HI = 300
+
+BUILD_KW = {
+    "deltatree": dict(height=4, max_dnodes=512, buf_cap=8),
+    "forest": dict(num_shards=3, height=4, max_dnodes=512, buf_cap=8,
+                   key_max=KEY_HI),
+    "sorted_array": dict(cap=4096),
+    "static_veb": {},
+}
+SCAN_BACKENDS = tuple(BUILD_KW)           # everything but pointer_bst
+ENGINE_BACKENDS = ("deltatree", "forest")
+
+
+def _mk(backend, initial, engine=None, **kw):
+    return make_index(backend, initial=initial, engine=engine,
+                      **{**BUILD_KW[backend], **kw})
+
+
+def _oracle_band(live, lo, hi, k):
+    """First ``k`` live keys in the inclusive band [lo, hi]."""
+    a = np.asarray(sorted(live))
+    return a[(a >= lo) & (a <= hi)][:k]
+
+
+def _check_scan_reads(ix, oracle, rng, max_items=16):
+    for _ in range(4):
+        lo = int(rng.integers(1, KEY_HI))
+        hi = int(rng.integers(lo, KEY_HI + 5))
+        res = ix.range_scan(lo, hi, max_items=max_items)
+        exp = _oracle_band(oracle.s, lo, hi, max_items)
+        np.testing.assert_array_equal(res.keys, exp)
+        in_band = sum(lo <= x <= hi for x in oracle.s)
+        assert res.more == (in_band > max_items), (lo, hi, res)
+        assert (res.cursor is None) == (not res.more or res.count == 0)
+
+
+@pytest.mark.parametrize("backend", SCAN_BACKENDS)
+def test_range_scan_trace_matches_oracle(backend):
+    """Randomized update trace: after every batch, range scans over
+    random inclusive bands agree with the oracle, and the ``more`` /
+    cursor flags reflect the true band population."""
+    rng = np.random.default_rng(41)
+    initial = np.unique(rng.integers(1, KEY_HI, 80).astype(np.int32))
+    ix = _mk(backend, initial)
+    assert ix.capability.range_scan and ix.capability.successor_k
+    oracle = SetOracle(initial)
+    for _ in range(6):
+        _check_scan_reads(ix, oracle, rng)
+        kinds = rng.integers(0, 3, size=24).astype(np.int32)
+        keys = rng.integers(1, KEY_HI, size=24).astype(np.int32)
+        ix, res = ix.insert_delete(OpBatch.mixed(kinds, keys))
+        np.testing.assert_array_equal(
+            np.asarray(res), oracle.apply_updates(kinds, keys))
+    # empty / inverted bands emit nothing and never truncate
+    for lo, hi in ((200, 150), (KEY_HI + 1, KEY_HI + 50)):
+        res = ix.range_scan(lo, hi)
+        assert res.count == 0 and not res.more and res.cursor is None
+
+
+@pytest.mark.parametrize("backend", SCAN_BACKENDS)
+def test_successor_k_matches_oracle(backend):
+    rng = np.random.default_rng(42)
+    initial = np.unique(rng.integers(1, KEY_HI, 90).astype(np.int32))
+    ix = _mk(backend, initial)
+    q = rng.integers(0, KEY_HI + 5, size=12).astype(np.int32)
+    k = 6
+    keys, pays, n, hops, more = ix.successor_k(jnp.asarray(q), k)
+    live = np.asarray(sorted(SetOracle(initial).s))
+    for i, qi in enumerate(q):
+        exp = live[live > qi][:k]
+        assert int(n[i]) == exp.size
+        np.testing.assert_array_equal(np.asarray(keys)[i, :exp.size], exp)
+        np.testing.assert_array_equal(
+            np.asarray(keys)[i, exp.size:], 0)     # zero-padded past n
+        assert bool(more[i]) == (live[live > qi].size > k)
+
+
+def test_range_scan_capability_gate():
+    ix = make_index("pointer_bst", initial=np.asarray([5, 9], np.int32),
+                    cap=64)
+    assert not ix.capability.range_scan
+    with pytest.raises(CapabilityError):
+        ix.range_scan(1, 100)
+    with pytest.raises(CapabilityError):
+        ix.successor_k(jnp.asarray([5], jnp.int32), 4)
+
+
+@pytest.mark.parametrize("backend", SCAN_BACKENDS)
+def test_cursor_pagination_replays_live_items(backend):
+    """Full-range pagination with a small emit buffer: chaining each
+    page's ScanCursor replays ``live_items`` exactly, then terminates
+    with cursor=None."""
+    rng = np.random.default_rng(43)
+    initial = np.unique(rng.integers(1, KEY_HI, 70).astype(np.int32))
+    ix = _mk(backend, initial)
+    got, cursor, pages = [], None, 0
+    while True:
+        if cursor is None:
+            res = ix.range_scan(1, KEY_HI + 5, max_items=7)
+        else:
+            res = ix.range_scan(0, 0, max_items=7, cursor=cursor)
+        got.extend(res.keys.tolist())
+        pages += 1
+        if res.cursor is None:
+            break
+        assert isinstance(res.cursor, ScanCursor)
+        cursor = res.cursor
+    assert got == [k for k, _ in ix.live_items()] == initial.tolist()
+    assert pages == -(-initial.size // 7)
+
+
+@pytest.mark.parametrize("backend", ENGINE_BACKENDS)
+def test_scan_engine_parity(backend):
+    """scalar vs lockstep on the raw batched hook: keys, payloads, n,
+    hops (the transfer statistic), and more — bit for bit, tombstones
+    included (the trace deletes throughout)."""
+    rng = np.random.default_rng(44)
+    initial = np.unique(rng.integers(1, KEY_HI, 90).astype(np.int32))
+    ix_s = _mk(backend, initial, engine="scalar")
+    ix_l = _mk(backend, initial, engine="lockstep")
+    for _ in range(3):
+        kinds = rng.integers(0, 3, size=24).astype(np.int32)
+        keys = rng.integers(1, KEY_HI, size=24).astype(np.int32)
+        batch = OpBatch.mixed(kinds, keys)
+        ix_s, _ = ix_s.insert_delete(batch)
+        ix_l, _ = ix_l.insert_delete(batch)
+        lo = rng.integers(0, KEY_HI, size=16).astype(np.int32)
+        hi = (lo + rng.integers(1, 80, size=16)).astype(np.int32)
+        for ix_pair in ((ix_s, ix_l),):
+            outs = [ix.spec.backend.scan(ix.spec.cfg, ix.state,
+                                         jnp.asarray(lo), jnp.asarray(hi), 8)
+                    for ix in ix_pair]
+            for a, b in zip(*outs):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forest_dispatch_parity_and_oracle():
+    """Fused cross-shard frontier vs dense per-shard vmap: the merged
+    global-order scan rows agree bit for bit, and both match the
+    oracle."""
+    rng = np.random.default_rng(45)
+    initial = np.unique(rng.integers(1, KEY_HI, 100).astype(np.int32))
+    ix_f = _mk("forest", initial, engine="lockstep")
+    ix_v = _mk("forest", initial, engine="lockstep", fused=False)
+    assert ix_f.capability.fused_forest and not ix_v.capability.fused_forest
+    lo = rng.integers(0, KEY_HI, size=12).astype(np.int32)
+    hi = (lo + rng.integers(1, 120, size=12)).astype(np.int32)
+    out_f = ix_f.spec.backend.scan(ix_f.spec.cfg, ix_f.state,
+                                   jnp.asarray(lo), jnp.asarray(hi), 10)
+    out_v = ix_v.spec.backend.scan(ix_v.spec.cfg, ix_v.state,
+                                   jnp.asarray(lo), jnp.asarray(hi), 10)
+    for a, b in zip(out_f, out_v):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    keys, _, n, _, more = out_f
+    live = np.asarray(sorted(SetOracle(initial).s))
+    for i in range(lo.size):
+        exp = live[(live > lo[i]) & (live <= hi[i])][:10]  # hook: excl start
+        assert int(n[i]) == exp.size
+        np.testing.assert_array_equal(np.asarray(keys)[i, :exp.size], exp)
+
+
+@pytest.mark.parametrize("backend", ENGINE_BACKENDS)
+def test_scan_deferred_merges_buffered_items(backend):
+    """Non-eager maintenance carries inserts in overflow buffers (I5');
+    scans must still return them, merged into key order, on both
+    engines bit-identically."""
+    rng = np.random.default_rng(46)
+    initial = np.unique(rng.integers(1, KEY_HI, 60).astype(np.int32))
+    ixs = [_mk(backend, initial, engine=e, maintenance="deferred")
+           for e in ("scalar", "lockstep")]
+    oracle = SetOracle(initial)
+    saw_pending = False
+    for _ in range(5):
+        kinds = rng.integers(0, 3, size=20).astype(np.int32)
+        keys = rng.integers(1, KEY_HI, size=20).astype(np.int32)
+        batch = OpBatch.mixed(kinds, keys)
+        stats = None
+        for j, ix in enumerate(ixs):
+            ixs[j], _, stats = ix.update(batch)
+        oracle.apply_updates(kinds, keys)
+        saw_pending |= int(stats.pending) > 0
+        _check_scan_reads(ixs[0], oracle, rng, max_items=12)
+        lo = rng.integers(0, KEY_HI, size=10).astype(np.int32)
+        hi = (lo + rng.integers(1, 100, size=10)).astype(np.int32)
+        outs = [ix.spec.backend.scan(ix.spec.cfg, ix.state, jnp.asarray(lo),
+                                     jnp.asarray(hi), 12) for ix in ixs]
+        for a, b in zip(*outs):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert saw_pending, "trace never exercised carried buffers"
+
+
+def test_live_items_global_key_order():
+    """Satellite contract: live_items is ascending in the GLOBAL key
+    space for sharded backends too — the ordering range_scan pagination
+    is checked against."""
+    rng = np.random.default_rng(47)
+    initial = np.unique(rng.integers(1, KEY_HI, 80).astype(np.int32))
+    for backend in SCAN_BACKENDS:
+        ix = _mk(backend, initial)
+        keys = [k for k, _ in ix.live_items()]
+        assert keys == sorted(keys) == initial.tolist(), backend
+
+
+def test_reclaimed_counter_tracks_freed_arena_slots():
+    """MaintenanceStats.reclaimed counts arena slots returned to the
+    freelist by Merge — nonzero on delete-heavy eager traces, and under
+    a budget the counter accumulates across update + flush while the
+    live set still tracks the oracle."""
+    from tests.test_deltatree import check_invariants
+
+    rng = np.random.default_rng(48)
+    vals = np.unique(rng.integers(1, KEY_HI, 120).astype(np.int32))
+    for policy in ("eager", "budgeted:2"):
+        ix = make_index("deltatree", initial=vals, maintenance=policy,
+                        height=4, max_dnodes=512, buf_cap=8)
+        oracle = SetOracle(vals)
+        reclaimed = 0
+        for i in range(6):
+            # delete LIVE keys so ΔNodes actually empty out and Merge
+            # returns their arena slots to the freelist
+            live = np.asarray(sorted(oracle.s))
+            kinds = np.full(16, 2, np.int32)
+            keys = rng.choice(live, size=min(16, live.size),
+                              replace=False).astype(np.int32)
+            kinds = kinds[: keys.size]
+            ix, res, stats = ix.update(OpBatch.mixed(kinds, keys))
+            np.testing.assert_array_equal(
+                np.asarray(res), oracle.apply_updates(kinds, keys))
+            assert int(stats.reclaimed) >= 0
+            reclaimed += int(stats.reclaimed)
+        ix, fstats = ix.flush()
+        reclaimed += int(fstats.reclaimed)
+        assert reclaimed > 0, policy
+        assert [k for k, _ in ix.live_items()] == sorted(oracle.s)
+        check_invariants(ix.spec.cfg, ix.state)
+
+
+def test_forest_scan_8_fake_devices():
+    """The fused cross-shard scan over a real 8-device shard_map mesh:
+    global-order rows and successor_k against the oracle."""
+    out = run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.api import make_index
+rng = np.random.default_rng(51)
+vals = np.unique(rng.integers(1, 2000, 300).astype(np.int32))
+ix = make_index("forest", initial=vals, num_shards=8, height=4,
+                max_dnodes=512, buf_cap=8, key_max=2000, engine="lockstep")
+assert ix.capability.fused_forest
+lo = rng.integers(0, 2000, size=16).astype(np.int32)
+hi = (lo + rng.integers(1, 400, size=16)).astype(np.int32)
+keys, pays, n, hops, more = ix.spec.backend.scan(
+    ix.spec.cfg, ix.state, jnp.asarray(lo), jnp.asarray(hi), 12)
+for i in range(16):
+    exp = vals[(vals > lo[i]) & (vals <= hi[i])][:12]
+    assert int(n[i]) == exp.size, (i, int(n[i]), exp)
+    np.testing.assert_array_equal(np.asarray(keys)[i, :exp.size], exp)
+res = ix.range_scan(100, 900, max_items=64)
+exp = vals[(vals >= 100) & (vals <= 900)][:64]
+np.testing.assert_array_equal(res.keys, exp)
+sk, _, sn, _, _ = ix.successor_k(jnp.asarray(lo), 5)
+for i in range(16):
+    exp = vals[vals > lo[i]][:5]
+    np.testing.assert_array_equal(np.asarray(sk)[i, :exp.size], exp)
+print("FOREST SCAN 8DEV OK", jax.device_count())
+""", devices=8)
+    assert "FOREST SCAN 8DEV OK 8" in out
+
+
+def test_serve_scan_x64():
+    """ServeScheduler.scan(): one batched dispatch returns each live
+    sequence's page list in block order (vs the pager's block tables),
+    and the ScanStats snapshot lands in metrics()."""
+    out = run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.models.registry import api
+from repro.serve import SchedulerConfig, ServeScheduler
+from repro.serving import PagerConfig
+
+cfg = get_smoke_config("granite_8b")
+m = api(cfg)
+params = m.init_params(jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+pc = PagerConfig(num_pages=64, page_size=4, max_seqs=16, max_blocks=64,
+                 tree_height=4)
+sch = ServeScheduler(cfg, params, pc, SchedulerConfig(max_live=4))
+sids = [sch.submit(rng.integers(1, cfg.vocab_size, size=n).astype(np.int32),
+                   max_new=4) for n in (5, 9, 3, 7)]
+for _ in range(2):
+    sch.step()
+res = sch.scan(sids)
+emitted = 0
+for s in sids:
+    nb = sch.pager.seq_blocks.get(s, 0)
+    got = np.asarray(res[s])
+    assert len(got) == nb, (s, len(got), nb)
+    if nb:
+        np.testing.assert_array_equal(
+            got, sch.pager.block_tables([s], nb)[0][:nb])
+    emitted += nb
+assert emitted > 0
+snap = sch.metrics()
+assert snap["scan"]["scans"] == 1 and snap["scan"]["lanes"] == len(sids)
+assert snap["scan"]["emitted"] == emitted
+assert "repro_scan_emitted" in sch.metrics("prometheus")
+print("SERVE SCAN OK", emitted)
+""", x64=True, timeout=1800)
+    assert "SERVE SCAN OK" in out
+
+
+def test_scan_stats_fold():
+    from repro.obs import ScanStats
+
+    a = ScanStats.of(jnp.asarray([3, 0, 2]), jnp.asarray([7, 0, 11]),
+                     jnp.asarray([True, False, False]))
+    b = ScanStats.of(jnp.asarray([1]), jnp.asarray([2]),
+                     jnp.asarray([False]))
+    d = a.merge(b).asdict()
+    assert d == {"scans": 2, "lanes": 4, "emitted": 6, "truncated": 1,
+                 "hops_sum": 20, "hops_max": 11}
+    r = ScanStats.reduce(jax.tree.map(lambda *xs: jnp.stack(xs), a, b))
+    assert r.asdict()["hops_max"] == 11 and r.asdict()["scans"] == 2
